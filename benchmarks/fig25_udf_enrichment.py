@@ -1,0 +1,102 @@
+"""Fig 25 — enrichment with UDFs Q1-Q4 (hash join / group-by / order-by /
+spatial join) at 1X/4X/16X batches.
+
+Configurations, mirroring the paper's:
+  * new_sqlpp_*   — the new framework, Model 2 (state refreshed per batch),
+                    jitted declarative UDFs (the paper's SQL++ case)
+  * new_py_*      — same pipeline, but the UDF body is host-language python
+                    per batch (the paper's Java-UDF analog)
+  * current_noupd — coupled pipeline, Model 3: state built once, never
+                    refreshed ("current w/o updates", the throughput ideal
+                    that is blind to reference changes)
+  * new_gated     — beyond-paper: version-gated Model 2 (Model-3 speed when
+                    reference data is quiet, Model-2 freshness always)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X, emit,
+                               make_manager, run_feed)
+from repro.core import ComputingRunner, ComputingSpec
+from repro.core.enrich import queries as Q
+from repro.core.records import SyntheticTweets, parse_json_lines
+
+FIG = "fig25"
+UDFS = {"q1": Q.Q1, "q2": Q.Q2, "q3": Q.Q3, "q4": Q.Q4}
+
+
+# ---------------------------------------------------------------------------
+# host-language ("Java") UDF bodies
+# ---------------------------------------------------------------------------
+
+def py_q1(batch, snap):
+    a = snap["safety_levels"].arrays
+    table = {int(k): int(v) for k, v in zip(a["key"], a["safety_level"])}
+    return {"safety_level": np.asarray(
+        [table.get(int(c), -1) for c in batch["country"]], np.int32)}
+
+
+def py_q4(batch, snap):
+    a = snap["monuments"].arrays
+    pts = np.stack([a["lat"], a["lon"]], 1)
+    out_ids, out_cnt = [], []
+    for la, lo in zip(batch["lat"], batch["lon"]):
+        d2 = (pts[:, 0] - la) ** 2 + (pts[:, 1] - lo) ** 2
+        hits = np.where(d2 <= Q.Q4_RADIUS ** 2)[0]
+        order = hits[np.argsort(d2[hits])][:Q.Q4_K]
+        ids = np.full(Q.Q4_K, -1, np.int64)
+        ids[:len(order)] = a["key"][order]
+        out_ids.append(ids)
+        out_cnt.append(len(hits))
+    return {"nearby_monuments": np.stack(out_ids),
+            "nearby_monument_count": np.asarray(out_cnt, np.int32)}
+
+
+PY_UDFS = {"q1": ("safety_levels", py_q1), "q4": ("monuments", py_q4)}
+
+
+def bench_python_udf(mgr, name, total, batch):
+    table, fn = PY_UDFS[name]
+    src = SyntheticTweets(seed=11)
+    t0 = time.perf_counter()
+    for frame in src.batches(total, batch):
+        parsed = parse_json_lines(frame)
+        snap = mgr.refstore.snapshot((table,))
+        fn(parsed, snap)                      # state rebuilt per batch
+    return total / (time.perf_counter() - t0)
+
+
+def main(total: int = 8_000) -> None:
+    mgr = make_manager(scale=0.02)
+    batches = (("1X", BATCH_1X), ("4X", BATCH_4X), ("16X", BATCH_16X))
+
+    for qname, udf in UDFS.items():
+        for blabel, batch in batches:
+            s = run_feed(mgr, f"f25-{qname}-{blabel}", total, batch,
+                         udf=udf, framework="new", partitions=2)
+            emit(FIG, f"{qname}_sqlpp_{blabel}", s.records_per_s, "rec/s",
+                 f"state_builds={s.computing.state_builds}")
+        # current w/o updates (Model 3, coupled)
+        s = run_feed(mgr, f"f25-{qname}-noupd", total, BATCH_1X, udf=udf,
+                     framework="balanced", partitions=2)
+        emit(FIG, f"{qname}_current_noupd", s.records_per_s, "rec/s",
+             "state built once; blind to reference updates")
+        # beyond-paper: version-gated
+        s = run_feed(mgr, f"f25-{qname}-gated", total, BATCH_1X, udf=udf,
+                     framework="new", partitions=2, refresh="version")
+        emit(FIG, f"{qname}_gated_1X", s.records_per_s, "rec/s",
+             f"state_builds={s.computing.state_builds} (vs per-batch)")
+
+    for qname in PY_UDFS:
+        for blabel, batch in (("1X", BATCH_1X), ("16X", BATCH_16X)):
+            rps = bench_python_udf(mgr, qname, min(total, 4000), batch)
+            emit(FIG, f"{qname}_python_{blabel}", rps, "rec/s",
+                 "host-language UDF (Java analog)")
+
+
+if __name__ == "__main__":
+    main()

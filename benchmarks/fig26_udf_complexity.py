@@ -1,0 +1,32 @@
+"""Fig 26 — UDF complexity comparison (Q4-Q7) at 1X/4X/16X batches.
+
+Paper claim reproduced: Tweet Context (Q6) does expensive ref-x-ref spatial
+joins in its *state* build, so larger batches amortize it dramatically; the
+probe-dominated UDFs (Q4/Q5/Q7) gain much less from batching."""
+
+from __future__ import annotations
+
+from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X, emit,
+                               make_manager, run_feed)
+from repro.core.enrich import queries as Q
+
+FIG = "fig26"
+UDFS = {"q4": Q.Q4, "q5": Q.Q5, "q6": Q.Q6, "q7": Q.Q7}
+
+
+def main(total: int = 4_000, scale: float = 0.02) -> None:
+    mgr = make_manager(scale=scale)
+    for qname, udf in UDFS.items():
+        for blabel, batch in (("1X", BATCH_1X), ("4X", BATCH_4X),
+                              ("16X", BATCH_16X)):
+            s = run_feed(mgr, f"f26-{qname}-{blabel}", total, batch,
+                         udf=udf, framework="new", partitions=2)
+            c = s.computing
+            emit(FIG, f"{qname}_{blabel}_records_per_s", s.records_per_s,
+                 "rec/s",
+                 f"state_s={c.state_s:.2f} apply_s={c.apply_s:.2f} "
+                 f"invocations={c.invocations}")
+
+
+if __name__ == "__main__":
+    main()

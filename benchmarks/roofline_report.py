@@ -1,0 +1,49 @@
+"""Roofline summary: reads the dry-run artifacts (launch_artifacts/dryrun)
+and emits the per-(arch x shape x mesh) roofline terms as CSV — the §Perf
+scoreboard.  Run ``python -m repro.launch.dryrun --all`` first."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+FIG = "roofline"
+ART = os.path.join(os.path.dirname(__file__), "..", "launch_artifacts",
+                   "dryrun")
+
+
+def main() -> None:
+    files = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not files:
+        emit(FIG, "no_artifacts", 0, "", "run repro.launch.dryrun --all")
+        return
+    for path in files:
+        r = json.load(open(path))
+        cell = f"{r['arch']}__{r['shape']}__{r['mesh']}"
+        if r["status"] == "skip":
+            emit(FIG, cell, 0, "skip", r["reason"])
+            continue
+        if r["status"] != "ok":
+            emit(FIG, cell, 0, r["status"], r.get("error", "")[:80])
+            continue
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        bound = rf[f"{rf['dominant']}_s"]
+        emit(FIG, f"{cell}_dominant", rf["dominant"], "",
+             f"c={rf['compute_s']:.4f}s m={rf['memory_s']:.4f}s "
+             f"coll={rf['collective_s']:.4f}s")
+        emit(FIG, f"{cell}_roofline_frac", rf["compute_s"] / max(bound,
+                                                                 1e-12),
+             "", "compute_term/dominant_term (1.0 = compute-bound)")
+        emit(FIG, f"{cell}_useful_ratio", round(r["useful_ratio"], 3), "",
+             r["model_flops_formula"])
+        emit(FIG, f"{cell}_hbm_fit", int(r["hbm_fit"]), "bool",
+             f"arg+temp+out GB/dev="
+             f"{(r['arg_bytes_per_dev'] + r['temp_bytes_per_dev'] + r['out_bytes_per_dev']) / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

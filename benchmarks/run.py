@@ -1,0 +1,54 @@
+"""Benchmark harness entrypoint (deliverable d): one module per paper
+figure, plus the roofline summary derived from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--fig figNN] [--full]
+
+Emits CSV rows (fig,name,value,unit,notes) to stdout and
+benchmarks/results.csv.  Absolute numbers are single-CPU-core wall clock;
+the reproduced claims are the relative effects (see benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import common
+from benchmarks import fig24_basic_ingestion as f24
+from benchmarks import fig25_udf_enrichment as f25
+from benchmarks import fig26_udf_complexity as f26
+from benchmarks import fig28_speedup as f28
+from benchmarks import fig29_scaleout as f29
+from benchmarks import roofline_report as froof
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig", default=None,
+                    help="run a single figure (fig24..fig29, roofline)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale record counts (slow on 1 core)")
+    args = ap.parse_args()
+
+    k = 5 if args.full else 1
+    figs = {
+        "fig24": lambda: f24.main(total=20_000 * k),
+        "fig25": lambda: f25.main(total=8_000 * k),
+        "fig26": lambda: f26.main(total=4_000 * k),
+        "fig28": lambda: f28.main(total=3_000 * k),
+        "fig29": lambda: f29.main(base_total=2_000 * k),
+        "roofline": froof.main,
+    }
+    todo = [args.fig] if args.fig else list(figs)
+    print("fig,name,value,unit,notes")
+    t0 = time.perf_counter()
+    for name in todo:
+        figs[name]()
+    common.emit("all", "total_bench_wall", time.perf_counter() - t0, "s")
+    common.write_csv("benchmarks/results.csv")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Model 1 vs Model 2 vs Model 3 (§5.3): why the paper's batched computing
+model exists.
+
+Scenario: tweets stream in while an analyst UPSERTs new rows into the
+ReligiousPopulations reference dataset.  We enrich the same stream under
+each computing model and show what each one sees — Model 3 (today's
+AsterixDB streaming evaluation) serves stale enrichments forever; Model 2
+(this paper) picks the update up at the next batch; the version-gated
+variant does the same with far fewer state rebuilds.
+
+Run:  PYTHONPATH=src python examples/enrichment_freshness.py
+"""
+
+import numpy as np
+
+from repro.core import ComputingRunner, ComputingSpec, RefStore
+from repro.core.enrich import queries as Q
+from repro.core.records import empty_batch
+
+
+def tweet_batch(country: int, n: int = 8):
+    b = empty_batch(n)
+    b["id"][:] = np.arange(n)
+    b["country"][:] = country
+    b["valid"][:] = True
+    return b
+
+
+store = RefStore()
+t = store.create("religious_populations", 64,
+                 {"country": np.int32, "religion": np.int32,
+                  "population": np.int32})
+t.upsert(np.array([0], np.int64), country=np.array([7], np.int32),
+         religion=np.array([1], np.int32),
+         population=np.array([1000], np.int32))
+
+runners = {
+    "model1_per_record": ComputingRunner(
+        ComputingSpec(Q.Q2, 8, "per_record"), store),
+    "model2_per_batch": ComputingRunner(
+        ComputingSpec(Q.Q2, 8, "per_batch", "always"), store),
+    "model2_version_gated": ComputingRunner(
+        ComputingSpec(Q.Q2, 8, "per_batch", "version"), store),
+    "model3_stream": ComputingRunner(
+        ComputingSpec(Q.Q2, 8, "stream"), store),
+}
+
+print("batch 1 (population of country 7 = 1000):")
+for name, r in runners.items():
+    out = r.run(tweet_batch(7))
+    print(f"  {name:22s} -> {int(out['religious_population'][0])}")
+
+print("\n>> UPSERT: +5000 believers in country 7 (mid-ingestion)\n")
+t.upsert(np.array([1], np.int64), country=np.array([7], np.int32),
+         religion=np.array([2], np.int32),
+         population=np.array([5000], np.int32))
+
+print("batch 2 (true value now 6000):")
+for name, r in runners.items():
+    out = r.run(tweet_batch(7))
+    seen = int(out["religious_population"][0])
+    verdict = "FRESH" if seen == 6000 else "STALE"
+    print(f"  {name:22s} -> {seen}  [{verdict}]  "
+          f"state_builds={r.stats.state_builds}")
+
+m2 = runners["model2_per_batch"]
+gated = runners["model2_version_gated"]
+assert int(m2.stats.state_builds) == 2           # rebuilt every batch
+assert int(gated.stats.state_builds) == 2        # rebuilt only on change
+for _ in range(3):                               # quiet batches
+    m2.run(tweet_batch(7))
+    gated.run(tweet_batch(7))
+print(f"\nafter 3 quiet batches: paper-faithful Model 2 built state "
+      f"{m2.stats.state_builds}x, version-gated {gated.stats.state_builds}x "
+      f"(beyond-paper optimization)")

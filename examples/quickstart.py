@@ -1,0 +1,55 @@
+"""Quickstart: the paper's running example, end to end.
+
+Equivalent of the paper's DDL (Figures 1, 4, 8, 12):
+
+    CREATE DATASET Tweets(TweetType);
+    CREATE FUNCTION tweetSafetyCheck(t) { ... SensitiveWords join ... };
+    CREATE FEED TweetFeed; CONNECT FEED TweetFeed TO DATASET EnrichedTweets
+        APPLY FUNCTION tweetSafetyCheck;
+    START FEED TweetFeed;
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import FeedConfig, FeedManager, RefStore, SyntheticAdapter
+from repro.core.enrich import queries as Q
+from repro.core.records import hash64
+
+# 1. reference data: the SensitiveWords dataset (UPSERT-able during
+#    ingestion — that's the point of the paper)
+store = RefStore()
+sw = store.create("sensitive_words", capacity=1024,
+                  schema={"country": np.int32, "word": np.int64})
+sw.upsert(np.array([0], np.int64),
+          country=np.array([Q.US_CODE], np.int32),
+          word=np.array([hash64("bomb")], np.int64))
+
+# 2. create + start the feed with the enrichment UDF attached
+mgr = FeedManager(store)
+cfg = FeedConfig(name="TweetFeed", udf=Q.UDF2, batch_size=420,
+                 num_partitions=2)
+feed = mgr.start(cfg, SyntheticAdapter(total=10_000, frame_size=420))
+
+# 3. mid-ingestion UPSERT: add a new sensitive keyword for country 3.
+#    Batches picked up after this point see it immediately (Model 2);
+#    no recompilation happens (parameterized predeployed job).
+sw.upsert(np.array([1], np.int64),
+          country=np.array([3], np.int32),
+          word=np.array([hash64("storm")], np.int64))
+
+stats = feed.join()
+
+# 4. "analytical query" over the enriched dataset:
+#    SELECT count(*) FROM EnrichedTweets WHERE safety_check_flag = "Red"
+red = sum(int((chunk["safety_check_flag"] != 0).sum())
+          for chunk in feed.storage.scan())
+
+print(f"ingested={stats.records_in} stored={stats.stored} "
+      f"red_flagged={red}")
+print(f"throughput={stats.records_per_s:,.0f} records/s  "
+      f"computing jobs={stats.computing.invocations}  "
+      f"compiles={stats.predeploy['compiles']} (predeployed: compiled "
+      f"once, invoked per batch)")
+assert stats.stored == 10_000

@@ -1,0 +1,48 @@
+"""Batched serving example: continuous-batching engine over any assigned
+arch (reduced config on CPU).  Requests arrive in waves; finished slots
+refill between decode steps, so decode utilization never drains.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch ID]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import api
+from repro.serve import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = api.init_params(cfg, jax.random.key(0))
+    engine = ServingEngine(cfg, params, slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(16, cfg.vocab_size, 8).tolist()
+        engine.submit(Request(prompt, max_new_tokens=12,
+                              stop_at_eos=False))
+
+    done = engine.run()
+    assert len(done) == args.requests
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid:2d}: +{len(r.tokens)} tokens "
+              f"{r.tokens[:6]}...")
+    print(f"\n{args.requests} requests on {args.slots} slots: "
+          f"{engine.decode_steps} decode steps, {engine.prefills} "
+          f"prefills (continuous batching: "
+          f"{args.requests * 12 / max(engine.decode_steps, 1):.1f} "
+          f"tokens/step vs {args.slots} ideal)")
+
+
+if __name__ == "__main__":
+    main()

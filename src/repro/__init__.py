@@ -1,0 +1,13 @@
+"""repro — a production-grade JAX reproduction of "An IDEA: An Ingestion
+Framework for Data Enrichment in AsterixDB" (Wang & Carey, PVLDB 2019).
+
+64-bit mode is enabled package-wide: the enrichment data plane joins on
+int64 primary keys / hashes (records.hash64, refdata.KEY_SENTINEL).  All
+model code is dtype-explicit (bf16/f32/int32), so enabling x64 does not
+change model numerics; the dry-run additionally asserts no f64 appears in
+lowered HLO.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

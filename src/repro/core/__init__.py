@@ -1,0 +1,33 @@
+"""The paper's primary contribution: the IDEA ingestion/enrichment
+framework — intake / computing / storage jobs, partition holders,
+parameterized predeployed (AOT-compiled) computing jobs, versioned
+reference data, and the Q1-Q7 enrichment-UDF workload."""
+
+from repro.core.computing import (  # noqa: F401
+    ComputingRunner,
+    ComputingSpec,
+    ComputingStats,
+)
+from repro.core.feed import FeedConfig, FeedHandle, FeedManager  # noqa: F401
+from repro.core.intake import (  # noqa: F401
+    Adapter,
+    FileAdapter,
+    IntakeJob,
+    SocketAdapter,
+    SyntheticAdapter,
+)
+from repro.core.partition_holder import (  # noqa: F401
+    STOP,
+    ActivePartitionHolder,
+    PartitionHolder,
+    PartitionHolderManager,
+    StopRecord,
+)
+from repro.core.predeploy import PredeployCache  # noqa: F401
+from repro.core.refdata import (  # noqa: F401
+    KEY_SENTINEL,
+    RefSnapshot,
+    RefStore,
+    RefTable,
+)
+from repro.core.storage import StorageJob, StoragePartition  # noqa: F401

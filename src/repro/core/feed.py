@@ -1,0 +1,340 @@
+"""The Active Feed Manager (§7.1) and feed lifecycle.
+
+``FeedManager.start`` wires the three-job pipeline of Fig 23:
+
+    intake job  ->  [passive intake holders]  ->  computing workers
+                ->  [active storage holder]   ->  storage job
+
+and keeps invoking computing jobs while data flows (here: a worker loop per
+partition — each ``ComputingRunner.run`` call is one computing-job
+invocation, counted and timed).  Stop protocol per §7.1: the adapter ends,
+the intake job enqueues StopRecords, computing workers drain and finish
+partial batches, the storage holder closes after the last worker.
+
+Also implements the paper's baselines for §8's comparisons:
+
+  framework="current"   coupled single job, single parsing node, Model-3
+                        state (AsterixDB data feeds with a Java UDF)
+  framework="balanced"  coupled, parsing divided over all nodes
+  framework="insert"    Approach 1: repeated INSERT statements — every
+                        batch pays query compilation (no predeploy cache)
+  framework="new"       this paper: decoupled + predeployed + Model 2
+
+Fault tolerance: per-invocation retry with exponential backoff; failed
+frames are re-enqueued (at-least-once) and the idempotent storage job makes
+delivery effectively exactly-once.  Idle workers steal from the deepest
+holder (straggler mitigation).  ``FeedHandle.scale_up`` adds computing
+partitions mid-feed (elasticity — the round-robin partitioner re-targets).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import records
+from repro.core.computing import ComputingRunner, ComputingSpec, \
+    ComputingStats
+from repro.core.enrich.queries import EnrichUDF
+from repro.core.intake import Adapter, IntakeJob
+from repro.core.partition_holder import (ActivePartitionHolder,
+                                         PartitionHolder,
+                                         PartitionHolderManager, STOP,
+                                         StopRecord)
+from repro.core.predeploy import PredeployCache
+from repro.core.refdata import RefStore
+from repro.core.storage import StorageJob
+
+
+@dataclasses.dataclass
+class FeedConfig:
+    name: str = "feed"
+    udf: Optional[EnrichUDF] = None
+    batch_size: int = 420                 # the paper's 1X
+    num_partitions: int = 1
+    model: str = "per_batch"              # per_record | per_batch | stream
+    refresh: str = "always"               # always | version
+    framework: str = "new"                # new | current | balanced | insert
+    storage_partitions: int = 0           # 0 -> num_partitions
+    spill_dir: Optional[str] = None
+    upsert: bool = False
+    work_stealing: bool = True
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    holder_capacity: int = 8
+    # test hook: raises inside the computing job when it returns True
+    fault_hook: Optional[Callable[[int], bool]] = None
+    # alternate sink: enriched batches go to this callable instead of the
+    # storage job (the LM data plane consumes batches directly — see
+    # train/data_feed.py)
+    sink: Optional[Callable[[Dict], None]] = None
+
+
+@dataclasses.dataclass
+class FeedStats:
+    wall_s: float = 0.0
+    records_in: int = 0
+    frames_in: int = 0
+    stored: int = 0
+    retries: int = 0
+    steals: int = 0
+    computing: ComputingStats = dataclasses.field(
+        default_factory=ComputingStats)
+    predeploy: Dict = dataclasses.field(default_factory=dict)
+    storage_write_s: float = 0.0
+
+    @property
+    def records_per_s(self) -> float:
+        return self.records_in / self.wall_s if self.wall_s else 0.0
+
+
+class FeedHandle:
+    def __init__(self, cfg: FeedConfig, manager: "FeedManager",
+                 adapter: Adapter):
+        self.cfg = cfg
+        self.manager = manager
+        self.adapter = adapter
+        self.storage: Optional[StorageJob] = None
+        self.intake: Optional[IntakeJob] = None
+        self.holders: List[PartitionHolder] = []
+        self.workers: List[threading.Thread] = []
+        self.runners: List[ComputingRunner] = []
+        self.storage_holder: Optional[ActivePartitionHolder] = None
+        self.stats = FeedStats()
+        self._t0 = 0.0
+        self._lock = threading.Lock()
+        self._worker_errs: List[BaseException] = []
+        self._invocation_counter = 0
+        self._live_workers = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def stop(self) -> None:
+        """Graceful stop: stop the adapter; the drain protocol finishes the
+        in-flight batches (§7.1)."""
+        self.adapter.stop()
+
+    def join(self, timeout: Optional[float] = None) -> FeedStats:
+        if self.intake is not None:
+            self.intake.join(timeout)
+        for w in self.workers:
+            w.join(timeout)
+        if self.storage_holder is not None:
+            # last computing job done -> storage stops
+            self.storage_holder.close()
+            self.storage_holder.join(timeout)
+        if self._worker_errs:
+            raise self._worker_errs[0]
+        if self.intake is not None and self.intake.error is not None:
+            raise self.intake.error
+        self._finalize()
+        return self.stats
+
+    def _finalize(self) -> None:
+        self.stats.wall_s = time.perf_counter() - self._t0
+        if self.intake is not None:
+            self.stats.records_in = self.intake.records_in
+            self.stats.frames_in = self.intake.frames_in
+        if self.storage is not None:
+            self.stats.stored = self.storage.stored
+            self.stats.storage_write_s = self.storage.write_s
+        for r in self.runners:
+            self.stats.computing.merge(r.stats)
+        self.stats.predeploy = self.manager.predeploy.stats()
+
+    # ------------------------------------------------------------ elasticity
+    def scale_up(self, extra_partitions: int) -> None:
+        """Add computing partitions mid-feed; the intake round-robin picks
+        them up on the next frame."""
+        base = len(self.holders)
+        for i in range(extra_partitions):
+            pid = base + i
+            holder = PartitionHolder((f"{self.cfg.name}:intake", pid),
+                                     self.cfg.holder_capacity)
+            self.manager.holder_manager.register(holder)
+            self.holders.append(holder)
+            self._spawn_worker(pid, holder)
+
+    def _spawn_worker(self, pid: int, holder: PartitionHolder) -> None:
+        runner = ComputingRunner(
+            ComputingSpec(self.cfg.udf, self.cfg.batch_size, self.cfg.model,
+                          self.cfg.refresh),
+            self.manager.refstore, self.manager.predeploy)
+        self.runners.append(runner)
+        with self._lock:
+            self._live_workers += 1
+        w = threading.Thread(target=self._worker_loop, args=(pid, holder,
+                                                             runner),
+                             name=f"{self.cfg.name}-compute-{pid}",
+                             daemon=True)
+        self.workers.append(w)
+        w.start()
+
+    # --------------------------------------------------------------- workers
+    def _run_with_retry(self, runner: ComputingRunner, frame) -> Dict:
+        attempt = 0
+        while True:
+            with self._lock:
+                inv = self._invocation_counter
+                self._invocation_counter += 1
+            try:
+                if self.cfg.fault_hook is not None and \
+                        self.cfg.fault_hook(inv):
+                    raise RuntimeError(f"injected fault @ invocation {inv}")
+                return runner.run(frame)
+            except Exception:
+                attempt += 1
+                if attempt > self.cfg.max_retries:
+                    raise
+                with self._lock:
+                    self.stats.retries += 1
+                time.sleep(self.cfg.retry_backoff_s * (2 ** (attempt - 1)))
+
+    def _worker_loop(self, pid: int, holder: PartitionHolder,
+                     runner: ComputingRunner) -> None:
+        try:
+            while True:
+                frame = holder.pull(timeout=0.05)
+                if frame is None or isinstance(frame, StopRecord):
+                    # idle or our queue drained: try stealing a backlog
+                    stolen = None
+                    if self.cfg.work_stealing:
+                        deep = self.manager.holder_manager.deepest(
+                            f"{self.cfg.name}:intake", exclude=pid)
+                        if deep is not None and deep.depth > 1:
+                            stolen = deep.steal()
+                    if stolen is None:
+                        if isinstance(frame, StopRecord):
+                            return
+                        continue
+                    frame = stolen
+                    with self._lock:
+                        self.stats.steals += 1
+                t0 = time.perf_counter()
+                out = self._run_with_retry(runner, frame)
+                holder.record_service(time.perf_counter() - t0)
+                self.storage_holder.push(out)
+        except BaseException as e:
+            self._worker_errs.append(e)
+        finally:
+            with self._lock:
+                self._live_workers -= 1
+
+
+class FeedManager:
+    """The AFM: tracks active feeds, owns the predeploy cache and the
+    partition-holder registry, and starts/stops the per-feed job trios."""
+
+    def __init__(self, refstore: Optional[RefStore] = None):
+        self.refstore = refstore or RefStore()
+        self.predeploy = PredeployCache()
+        self.holder_manager = PartitionHolderManager()
+        self.feeds: Dict[str, FeedHandle] = {}
+
+    # ---------------------------------------------------------------- start
+    def start(self, cfg: FeedConfig, adapter: Adapter) -> FeedHandle:
+        if cfg.name in self.feeds:
+            raise KeyError(f"feed {cfg.name} already active")
+        handle = FeedHandle(cfg, self, adapter)
+        self.feeds[cfg.name] = handle
+        handle._t0 = time.perf_counter()
+        nstore = cfg.storage_partitions or cfg.num_partitions
+        handle.storage = StorageJob(nstore, cfg.spill_dir, cfg.upsert)
+
+        if cfg.framework == "new":
+            self._start_new(cfg, handle)
+        elif cfg.framework in ("current", "balanced"):
+            self._start_coupled(cfg, handle,
+                                balanced=cfg.framework == "balanced")
+        elif cfg.framework == "insert":
+            self._start_insert(cfg, handle)
+        else:
+            raise ValueError(cfg.framework)
+        return handle
+
+    def _start_new(self, cfg: FeedConfig, handle: FeedHandle) -> None:
+        consumer = cfg.sink if cfg.sink is not None \
+            else handle.storage.write
+        handle.storage_holder = ActivePartitionHolder(
+            (f"{cfg.name}:storage", 0), consumer,
+            capacity=cfg.holder_capacity)
+        self.holder_manager.register(handle.storage_holder)
+        for pid in range(cfg.num_partitions):
+            holder = PartitionHolder((f"{cfg.name}:intake", pid),
+                                     cfg.holder_capacity)
+            self.holder_manager.register(holder)
+            handle.holders.append(holder)
+            handle._spawn_worker(pid, holder)
+        handle.intake = IntakeJob(handle.adapter, handle.holders)
+        handle.intake.start()
+
+    # ------------------------------------------------- coupled baselines
+    def _start_coupled(self, cfg: FeedConfig, handle: FeedHandle,
+                       balanced: bool) -> None:
+        """'Current feeds': one chained job — parse -> UDF (Model 3, state
+        never refreshed) -> store.  'Balanced': parsing (and the chained
+        work) divided over num_partitions threads."""
+        nthreads = cfg.num_partitions if balanced else 1
+        spec = ComputingSpec(cfg.udf, cfg.batch_size, model="stream")
+        handle.holders = [PartitionHolder((f"{cfg.name}:intake", i),
+                                          cfg.holder_capacity)
+                          for i in range(nthreads)]
+        for h in handle.holders:
+            self.holder_manager.register(h)
+
+        def loop(pid: int, holder: PartitionHolder,
+                 runner: ComputingRunner):
+            try:
+                while True:
+                    frame = holder.pull(timeout=0.05)
+                    if isinstance(frame, StopRecord):
+                        return
+                    if frame is None:
+                        continue
+                    out = runner.run(frame)       # parse+enrich chained
+                    handle.storage.write(out)     # ... with storage
+            except BaseException as e:
+                handle._worker_errs.append(e)
+
+        for i, h in enumerate(handle.holders):
+            runner = ComputingRunner(spec, self.refstore, self.predeploy)
+            handle.runners.append(runner)
+            w = threading.Thread(target=loop, args=(i, h, runner),
+                                 name=f"{cfg.name}-coupled-{i}", daemon=True)
+            handle.workers.append(w)
+            w.start()
+        handle.intake = IntakeJob(handle.adapter, handle.holders)
+        handle.intake.start()
+
+    def _start_insert(self, cfg: FeedConfig, handle: FeedHandle) -> None:
+        """Approach 1 (§5.2.1): an external program issuing repeated INSERT
+        statements — every statement re-pays query compilation and job
+        distribution, i.e. NO predeploy cache: fresh jit per batch."""
+        spec = ComputingSpec(cfg.udf, cfg.batch_size, model="per_batch")
+
+        def loop():
+            try:
+                runner = ComputingRunner(spec, self.refstore,
+                                         PredeployCache())
+                handle.runners.append(runner)
+                for frame in handle.adapter.frames():
+                    runner.cache = PredeployCache()   # recompilation cost
+                    out = runner.run(frame)
+                    handle.storage.write(out)
+                    handle.stats.frames_in += 1
+                    handle.stats.records_in += len(frame)
+            except BaseException as e:
+                handle._worker_errs.append(e)
+
+        w = threading.Thread(target=loop, name=f"{cfg.name}-insert",
+                             daemon=True)
+        handle.workers.append(w)
+        w.start()
+
+    def stop_all(self) -> None:
+        for h in self.feeds.values():
+            h.stop()

@@ -1,0 +1,157 @@
+"""The intake job (§7.2): adapter -> round-robin partitioner -> passive
+intake partition holders.
+
+Adapters obtain/receive raw data and arrange it into frames (one frame = one
+computing batch of JSON-line byte records).  The intake job never parses in
+the new framework — parsing happens inside the (parallel) computing jobs,
+which is exactly the difference the paper measures against "current feeds"
+where a single intake node parses everything (Fig 24's bottleneck).
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Iterable, Iterator, List, Optional
+
+from repro.core.partition_holder import PartitionHolder
+from repro.core.records import SyntheticTweets
+
+
+class Adapter:
+    """Iterator of frames (list[bytes]); ``stop()`` requests early end."""
+
+    def __init__(self):
+        self._stop = threading.Event()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def frames(self) -> Iterator[List[bytes]]:
+        raise NotImplementedError
+
+
+class SyntheticAdapter(Adapter):
+    """Deterministic tweet stream: ``total`` records in ``frame_size``
+    frames, optionally rate-limited (records/second)."""
+
+    def __init__(self, total: int, frame_size: int, seed: int = 0,
+                 rate: Optional[float] = None):
+        super().__init__()
+        self.total, self.frame_size, self.rate = total, frame_size, rate
+        self.source = SyntheticTweets(seed=seed)
+
+    def frames(self) -> Iterator[List[bytes]]:
+        t0 = time.perf_counter()
+        sent = 0
+        for frame in self.source.batches(self.total, self.frame_size):
+            if self._stop.is_set():
+                return
+            if self.rate:
+                target = t0 + sent / self.rate
+                delay = target - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            yield frame
+            sent += len(frame)
+
+
+class FileAdapter(Adapter):
+    """JSON-lines file -> frames."""
+
+    def __init__(self, path: str, frame_size: int):
+        super().__init__()
+        self.path, self.frame_size = path, frame_size
+
+    def frames(self) -> Iterator[List[bytes]]:
+        buf: List[bytes] = []
+        with open(self.path, "rb") as f:
+            for line in f:
+                if self._stop.is_set():
+                    return
+                line = line.strip()
+                if not line:
+                    continue
+                buf.append(line)
+                if len(buf) >= self.frame_size:
+                    yield buf
+                    buf = []
+        if buf:
+            yield buf
+
+
+class SocketAdapter(Adapter):
+    """The paper's socket feed (Fig 4): newline-delimited JSON over TCP.
+    Listens on (host, port); one connection at a time; EOF ends the feed."""
+
+    def __init__(self, host: str, port: int, frame_size: int):
+        super().__init__()
+        self.host, self.port, self.frame_size = host, port, frame_size
+        self._srv = socket.create_server((host, port))
+        self._srv.settimeout(0.5)
+
+    @property
+    def address(self):
+        return self._srv.getsockname()
+
+    def frames(self) -> Iterator[List[bytes]]:
+        try:
+            while not self._stop.is_set():
+                try:
+                    conn, _ = self._srv.accept()
+                    break
+                except socket.timeout:
+                    continue
+            else:
+                return
+            buf: List[bytes] = []
+            with conn, conn.makefile("rb") as f:
+                for line in f:
+                    if self._stop.is_set():
+                        return
+                    line = line.strip()
+                    if not line:
+                        continue
+                    buf.append(line)
+                    if len(buf) >= self.frame_size:
+                        yield buf
+                        buf = []
+            if buf:
+                yield buf
+        finally:
+            self._srv.close()
+
+
+class IntakeJob(threading.Thread):
+    """Long-running intake: distributes frames round-robin over the intake
+    partition holders, then closes them (StopRecord drain, §7.1).
+
+    ``holders`` is a live list — the elastic runtime may append/remove
+    holders mid-feed; the round-robin partitioner re-targets automatically.
+    """
+
+    def __init__(self, adapter: Adapter, holders: List[PartitionHolder]):
+        super().__init__(name="intake-job", daemon=True)
+        self.adapter = adapter
+        self.holders = holders
+        self.frames_in = 0
+        self.records_in = 0
+        self.error: Optional[BaseException] = None
+
+    def run(self) -> None:
+        try:
+            i = 0
+            for frame in self.adapter.frames():
+                # snapshot the live holder list each frame (elasticity)
+                hs = list(self.holders)
+                hs[i % len(hs)].push(frame)
+                i += 1
+                self.frames_in += 1
+                self.records_in += len(frame)
+        except BaseException as e:
+            self.error = e
+        finally:
+            for h in list(self.holders):
+                if not h.closed:
+                    h.close()

@@ -1,0 +1,204 @@
+"""Partition holders (§6.3): bounded, partition-aligned queues that let data
+frames cross job boundaries.
+
+A **passive** holder (tail of the intake job) buffers frames and waits for
+computing jobs to *pull*; an **active** holder (head of the storage job)
+*pushes* received frames to its downstream consumer from its own worker
+thread.  Every holder registers with a per-node ``PartitionHolderManager``
+so jobs locate each other by (job, partition) — the paper's holder IDs.
+
+Bounded capacity gives backpressure end-to-end: a slow storage job
+eventually blocks the computing jobs, which stop pulling, which blocks the
+intake adapter — no unbounded queue growth anywhere (the paper's "queue with
+a limited size").
+
+Extras beyond the paper, used by the runtime layer:
+  * service-time EWMA + depth metrics per holder (straggler detection),
+  * ``steal()`` so idle computing workers can take work from the deepest
+    queue (work stealing / straggler mitigation),
+  * a ``StopRecord`` sentinel implementing the paper's §7.1 drain protocol.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class StopRecord:
+    """The 'special data record' of §7.1: computing jobs finish their
+    current partial batch when they see it; the storage job closes after the
+    last computing job."""
+    __slots__ = ()
+
+    def __repr__(self):
+        return "<stop>"
+
+
+STOP = StopRecord()
+
+
+class PartitionHolder:
+    def __init__(self, holder_id: Tuple[str, int], capacity: int = 16):
+        self.holder_id = holder_id
+        self.capacity = capacity
+        self._q: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._closed = False
+        # metrics
+        self.pushed = 0
+        self.pulled = 0
+        self.push_wait_s = 0.0
+        self.pull_wait_s = 0.0
+        self.service_ewma_s = 0.0   # updated by consumers via record_service
+
+    # ------------------------------------------------------------------ push
+    def push(self, frame: Any, timeout: Optional[float] = None) -> bool:
+        t0 = time.perf_counter()
+        with self._not_full:
+            while len(self._q) >= self.capacity and not self._closed:
+                if not self._not_full.wait(timeout):
+                    return False
+            if self._closed and not isinstance(frame, StopRecord):
+                raise RuntimeError(f"push to closed holder {self.holder_id}")
+            self._q.append(frame)
+            self.pushed += 1
+            self.push_wait_s += time.perf_counter() - t0
+            self._not_empty.notify()
+            return True
+
+    # ------------------------------------------------------------------ pull
+    def pull(self, timeout: Optional[float] = None) -> Optional[Any]:
+        """Blocks until a frame is available; returns None on timeout.
+        StopRecord is re-queued so every consumer observes it."""
+        t0 = time.perf_counter()
+        with self._not_empty:
+            while not self._q:
+                if self._closed:
+                    return STOP
+                if not self._not_empty.wait(timeout):
+                    return None
+            frame = self._q.popleft()
+            if isinstance(frame, StopRecord):
+                self._q.appendleft(frame)   # visible to all consumers
+                self._closed = True
+                self._not_empty.notify_all()
+                self._not_full.notify_all()
+                return STOP
+            self.pulled += 1
+            self.pull_wait_s += time.perf_counter() - t0
+            self._not_full.notify()
+            return frame
+
+    def steal(self) -> Optional[Any]:
+        """Non-blocking take from the *tail* (most recently queued) — used by
+        idle workers for straggler mitigation; never steals the StopRecord."""
+        with self._lock:
+            # a closed holder keeps its StopRecord at the tail; steal the
+            # newest real frame just before it
+            for i in (-1, -2):
+                if len(self._q) >= -i and not isinstance(self._q[i],
+                                                         StopRecord):
+                    if i == -1:
+                        frame = self._q.pop()
+                    else:
+                        frame = self._q[i]
+                        del self._q[i]
+                    self.pulled += 1
+                    self._not_full.notify()
+                    return frame
+            return None
+
+    def close(self) -> None:
+        self.push(STOP)
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def record_service(self, seconds: float, alpha: float = 0.2) -> None:
+        self.service_ewma_s = (alpha * seconds
+                               + (1 - alpha) * self.service_ewma_s)
+
+
+class ActivePartitionHolder(PartitionHolder):
+    """Push-mode holder: a worker thread drains the queue into ``consumer``.
+    The storage job's head is one of these."""
+
+    def __init__(self, holder_id: Tuple[str, int],
+                 consumer: Callable[[Any], None], capacity: int = 16):
+        super().__init__(holder_id, capacity)
+        self._consumer = consumer
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name=f"active-holder-{holder_id}", daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            frame = self.pull(timeout=0.1)
+            if frame is None:
+                continue
+            if isinstance(frame, StopRecord):
+                return
+            try:
+                t0 = time.perf_counter()
+                self._consumer(frame)
+                self.record_service(time.perf_counter() - t0)
+            except BaseException as e:   # surfaced by join()
+                self._err = e
+                return
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+        if self._err is not None:
+            raise self._err
+
+
+class PartitionHolderManager:
+    """Per-node registry: jobs look up the holders of other jobs by ID."""
+
+    def __init__(self):
+        self._holders: Dict[Tuple[str, int], PartitionHolder] = {}
+        self._lock = threading.Lock()
+
+    def register(self, holder: PartitionHolder) -> PartitionHolder:
+        with self._lock:
+            if holder.holder_id in self._holders:
+                raise KeyError(f"holder {holder.holder_id} already exists")
+            self._holders[holder.holder_id] = holder
+            return holder
+
+    def lookup(self, job: str, partition: int) -> PartitionHolder:
+        return self._holders[(job, partition)]
+
+    def partitions(self, job: str) -> List[PartitionHolder]:
+        with self._lock:
+            return [h for (j, _), h in sorted(self._holders.items())
+                    if j == job]
+
+    def deepest(self, job: str,
+                exclude: Optional[int] = None) -> Optional[PartitionHolder]:
+        """The most-backlogged holder of a job (work-stealing target)."""
+        best, depth = None, 0
+        for h in self.partitions(job):
+            if exclude is not None and h.holder_id[1] == exclude:
+                continue
+            d = h.depth
+            if d > depth:
+                best, depth = h, d
+        return best
+
+    def unregister(self, holder_id: Tuple[str, int]) -> None:
+        with self._lock:
+            self._holders.pop(holder_id, None)

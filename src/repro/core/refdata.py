@@ -1,0 +1,169 @@
+"""Versioned reference-data store (the paper's "SensitiveWords"-style
+datasets that enrichment UDFs reference, and that may be UPSERTed *during*
+ingestion).
+
+The paper's Model-2 semantics: records in batch *i* must be enriched against
+the reference data as of batch *i*'s pickup — intermediate UDF state (hash
+tables, aggregates, top-k lists) is rebuilt at batch boundaries so upserts
+are visible during ingestion.  Model 3 (stream datasource) cannot do this;
+Model 1 (per record) refreshes per record but is too slow.  See §5.3.
+
+TPU adaptation (DESIGN.md §2): a reference table is a **fixed-capacity
+struct-of-arrays** with a validity count.  Upserts mutate rows in place /
+append, bump a version counter, and never change array shapes — so the
+AOT-compiled ("predeployed") enrichment executable keeps accepting the table
+as a *parameter* across updates with zero recompilation.  This is the JAX
+realization of the paper's parameterized predeployed jobs: the query is
+compiled once; the batch AND the current reference snapshot are the
+invocation parameters.
+
+Tables are keyed by an int64 primary key and maintain a sorted-key index
+(rebuilt lazily per snapshot) so device-side joins are `searchsorted`
+probes — the sorted-reference binary-search join that replaces pointer-chase
+hash tables on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+KEY_SENTINEL = np.iinfo(np.int64).max  # empty slot marker (sorts last)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefSnapshot:
+    """Immutable view of one table at a version.  ``arrays`` always contains
+    ``key`` (int64, padded with KEY_SENTINEL) plus the value columns, each of
+    the full static ``capacity`` — shape-stable across versions."""
+    name: str
+    version: int
+    size: int                      # valid rows (<= capacity)
+    arrays: Dict[str, np.ndarray]  # includes "key", sorted ascending by key
+
+    @property
+    def capacity(self) -> int:
+        return int(self.arrays["key"].shape[0])
+
+
+class RefTable:
+    """Fixed-capacity upsertable table. Thread-safe; snapshot() is O(1) when
+    unchanged and O(n log n) (re-sort) after writes."""
+
+    def __init__(self, name: str, capacity: int,
+                 schema: Dict[str, np.dtype]):
+        self.name = name
+        self.capacity = int(capacity)
+        self.schema = {k: np.dtype(v) for k, v in schema.items()}
+        self._lock = threading.Lock()
+        self._version = 0
+        self._size = 0
+        self._key = np.full((capacity,), KEY_SENTINEL, np.int64)
+        self._cols = {k: np.zeros((capacity,) if np.dtype(v).shape == ()
+                                  else (capacity,), v)
+                      for k, v in self.schema.items()}
+        # column arrays may be 2-D (e.g. fixed-width token lists)
+        for k, v in self.schema.items():
+            if v.subdtype is not None:
+                base, shape = v.subdtype
+                self._cols[k] = np.zeros((capacity,) + shape, base)
+        self._snapshot: Optional[RefSnapshot] = None
+
+    # ------------------------------------------------------------------ DML
+    def upsert(self, keys: np.ndarray, **cols: np.ndarray) -> None:
+        """UPSERT semantics per the paper's footnote 1: replace the row when
+        the key exists, insert otherwise."""
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if (keys == KEY_SENTINEL).any():
+            raise ValueError("KEY_SENTINEL is reserved")
+        with self._lock:
+            existing = {int(k): i for i, k in
+                        enumerate(self._key[:self._size])}
+            for j, key in enumerate(keys):
+                i = existing.get(int(key))
+                if i is None:
+                    if self._size >= self.capacity:
+                        raise RuntimeError(
+                            f"table {self.name} over capacity "
+                            f"{self.capacity}")
+                    i = self._size
+                    self._size += 1
+                    existing[int(key)] = i
+                self._key[i] = key
+                for c, arr in cols.items():
+                    self._cols[c][i] = np.asarray(arr)[j]
+            self._version += 1
+            self._snapshot = None
+
+    def delete(self, keys: np.ndarray) -> int:
+        keys = set(np.asarray(keys, np.int64).reshape(-1).tolist())
+        with self._lock:
+            keep = [i for i in range(self._size)
+                    if int(self._key[i]) not in keys]
+            removed = self._size - len(keep)
+            if removed:
+                for c in self._cols:
+                    self._cols[c][:len(keep)] = self._cols[c][keep]
+                self._key[:len(keep)] = self._key[keep]
+                self._key[len(keep):self._size] = KEY_SENTINEL
+                self._size = len(keep)
+                self._version += 1
+                self._snapshot = None
+            return removed
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> RefSnapshot:
+        """Sorted-by-key immutable view; cached until the next write."""
+        with self._lock:
+            if self._snapshot is not None:
+                return self._snapshot
+            order = np.argsort(self._key, kind="stable")
+            arrays = {"key": np.ascontiguousarray(self._key[order])}
+            for c, arr in self._cols.items():
+                arrays[c] = np.ascontiguousarray(arr[order])
+            self._snapshot = RefSnapshot(
+                self.name, self._version, self._size, arrays)
+            return self._snapshot
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._size
+
+
+class RefStore:
+    """Named tables + a store-wide version (max of table versions) used for
+    version-gated enrichment-state rebuild (beyond-paper optimization — the
+    paper rebuilds every batch unconditionally)."""
+
+    def __init__(self):
+        self._tables: Dict[str, RefTable] = {}
+        self._lock = threading.Lock()
+
+    def create(self, name: str, capacity: int,
+               schema: Dict[str, np.dtype]) -> RefTable:
+        with self._lock:
+            if name in self._tables:
+                raise KeyError(f"table {name} exists")
+            t = RefTable(name, capacity, schema)
+            self._tables[name] = t
+            return t
+
+    def __getitem__(self, name: str) -> RefTable:
+        return self._tables[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tables
+
+    def snapshot(self, names: Tuple[str, ...]) -> Dict[str, RefSnapshot]:
+        return {n: self._tables[n].snapshot() for n in names}
+
+    def version(self, names: Tuple[str, ...]) -> Tuple[int, ...]:
+        return tuple(self._tables[n].version for n in names)

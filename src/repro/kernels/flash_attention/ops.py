@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for flash attention."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, use_pallas: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    if not use_pallas:
+        return ref.flash_attention(q, k, v, causal)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(q, k, v, causal, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: exact softmax GQA attention (fp32 accumulation)."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, T, Kv, D); H = Kv * G.  Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)

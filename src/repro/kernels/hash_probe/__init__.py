@@ -1,0 +1,1 @@
+from repro.kernels.hash_probe.ops import sorted_probe  # noqa: F401

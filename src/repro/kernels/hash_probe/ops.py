@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the equi-join probe."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.hash_probe import ref
+from repro.kernels.hash_probe.kernel import sorted_probe_pallas
+
+
+def sorted_probe(probe: jax.Array, ref_keys: jax.Array,
+                 use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return ref.sorted_probe(probe, ref_keys)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sorted_probe_pallas(probe, ref_keys, interpret=interpret)

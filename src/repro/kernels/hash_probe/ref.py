@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the equi-join probe kernel (searchsorted form —
+identical semantics to core/enrich/ops.sorted_join)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refdata import KEY_SENTINEL
+
+
+def sorted_probe(probe: jax.Array, ref_keys: jax.Array):
+    """probe: (B,) int64; ref_keys: (R,) int64 ascending, sentinel-padded.
+    Returns (idx (B,) int32 [-1 when absent], found (B,) bool)."""
+    idx = jnp.searchsorted(ref_keys, probe)
+    idx = jnp.minimum(idx, ref_keys.shape[0] - 1)
+    found = (ref_keys[idx] == probe) & (probe != KEY_SENTINEL)
+    return jnp.where(found, idx, -1).astype(jnp.int32), found

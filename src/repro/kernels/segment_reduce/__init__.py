@@ -1,0 +1,1 @@
+from repro.kernels.segment_reduce.ops import segment_sum  # noqa: F401

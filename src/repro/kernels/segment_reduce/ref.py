@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the segment-reduce kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values: jax.Array, seg: jax.Array,
+                num_segments: int) -> jax.Array:
+    """values: (R,) float32/int32; seg: (R,) int32 in [0, num_segments)
+    (rows with seg >= num_segments are dropped).  Returns (num_segments,)."""
+    mask = seg < num_segments
+    vals = jnp.where(mask, values, 0)
+    return jax.ops.segment_sum(vals, jnp.where(mask, seg, 0),
+                               num_segments=num_segments)

@@ -1,0 +1,1 @@
+from repro.kernels.spatial_join.ops import radius_join  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the spatial radius join kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def radius_join(px: jax.Array, py: jax.Array, rx: jax.Array, ry: jax.Array,
+                radius: float, k: int, ref_valid: jax.Array | None = None):
+    """All-pairs reference implementation.
+    Returns (idx (B,k) int32 [-1 fill], dist2 (B,k) [inf fill], count (B,)).
+    Results ordered by ascending distance; ties broken by lower index."""
+    d2 = ((px[:, None] - rx[None, :]) ** 2
+          + (py[:, None] - ry[None, :]) ** 2)
+    if ref_valid is not None:
+        d2 = jnp.where(ref_valid[None, :], d2, jnp.inf)
+    r2 = jnp.float32(radius) ** 2
+    count = jnp.sum(d2 <= r2, axis=1).astype(jnp.int32)
+    kk = min(k, rx.shape[0])
+    neg, idx = jax.lax.top_k(-d2, kk)
+    dd = -neg
+    if kk < k:
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+        dd = jnp.pad(dd, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+    ok = dd <= r2
+    return (jnp.where(ok, idx, -1).astype(jnp.int32),
+            jnp.where(ok, dd, jnp.inf), count)

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (deliverable e): lower + compile every
+# (architecture x input shape) cell against the production mesh — 16x16
+# single-pod and 2x16x16 multi-pod — with ShapeDtypeStruct operands (no
+# allocation), then extract memory_analysis / cost_analysis / collective
+# schedule for EXPERIMENTS.md §Dry-run and §Roofline.
+#
+# The device-count override above MUST precede every other import (jax
+# locks the device count on first init); it lives only in this entrypoint,
+# so tests and benches keep seeing the single real CPU device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+import repro         # noqa: F401,E402  (enables x64)
+from repro.configs import (ALL_ARCHS, SHAPES, get_config,  # noqa: E402
+                           shape_applicable)
+from repro.launch import hlocost as HC                     # noqa: E402
+from repro.launch import roofline as RL                    # noqa: E402
+from repro.launch.mesh import V5E, make_production_mesh    # noqa: E402
+from repro.models import api                               # noqa: E402
+from repro.models.sharding import (recorded_fallbacks,     # noqa: E402
+                                   sharding_ctx, tree_shardings)
+from repro.train.optimizer import OptConfig                # noqa: E402
+from repro.train.steps import (make_train_step,            # noqa: E402
+                               train_state_axes, train_state_shapes)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "launch_artifacts", "dryrun")
+
+
+def opt_for(cfg) -> OptConfig:
+    """Memory preset: the bf16 (100B+) archs get factored-v bf16 Adam."""
+    huge = cfg.param_dtype == "bfloat16"
+    return OptConfig(state_dtype="bfloat16" if huge else "float32",
+                     factored_v=huge)
+
+
+def rules_for(shape, arch: str):
+    """Per-shape sharding-rule overrides (see DESIGN.md §4).
+
+    decode_32k: the KV cache dominates — shard its sequence dim over
+    'model' (flash-decoding style; softmax partials all-reduce).
+    long_500k: batch=1, so both non-trivial axes go to the sequence
+    (attention layers of hybrids) / heads stay on 'model' for SSM.
+    """
+    if shape.kind != "decode":
+        return {}
+    if shape.name == "long_500k":
+        return {"kv_seq": ("data", "model"), "batch": None}
+    return {"kv_seq": "model"}
+
+
+def build_cell(cfg, shape, microbatches: int = 1):
+    """Returns (fn, operand ShapeDtypeStructs, operand axes, donate)."""
+    if shape.kind == "train":
+        opt = opt_for(cfg)
+        step = make_train_step(cfg, opt, microbatches=microbatches)
+        st_shapes = train_state_shapes(cfg, opt)
+        st_axes = train_state_axes(cfg, opt)
+        b_shapes, b_axes = api.input_specs(cfg, shape)
+        return step, (st_shapes, b_shapes), (st_axes, b_axes), (0,)
+
+    p_shapes = api.param_shapes(cfg)
+    p_axes = api.param_axes(cfg)
+    if shape.kind == "prefill":
+        b_shapes, b_axes = api.input_specs(cfg, shape)
+
+        def prefill_fn(params, batch):
+            return api.prefill(cfg, params, batch["tokens"],
+                               batch.get("frontend"))
+
+        return prefill_fn, (p_shapes, b_shapes), (p_axes, b_axes), ()
+
+    b_shapes, b_axes = api.input_specs(cfg, shape)
+
+    def decode_fn(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens)
+
+    return (decode_fn,
+            (p_shapes, b_shapes["cache"], b_shapes["tokens"]),
+            (p_axes, b_axes["cache"], b_axes["tokens"]), (1,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, tag: str = "",
+             rule_overrides: dict | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    """One dry-run cell.  ``tag`` + overrides support the §Perf hillclimb:
+    variants re-lower the same cell with different sharding rules /
+    config knobs and land in tagged artifacts for comparison."""
+    cfg = get_config(arch)
+    microbatches = 1
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        microbatches = cfg_overrides.pop("_microbatches", 1)
+        if cfg_overrides:
+            cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = ("multi" if multi_pod else "single") + \
+        (f"@{tag}" if tag else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "status": "ok", "tag": tag,
+              "overrides": {"rules": rule_overrides or {},
+                            "cfg": cfg_overrides or {}}}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        result.update(status="skip", reason=why)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = rules_for(shape, arch)
+    if rule_overrides:
+        rules.update({k: (tuple(v) if isinstance(v, list) else v)
+                      for k, v in rule_overrides.items()})
+    fn, op_shapes, op_axes, donate = build_cell(cfg, shape, microbatches)
+
+    with sharding_ctx(mesh, rules) as ctx:
+        in_shardings = tuple(tree_shardings(s, a)
+                             for s, a in zip(op_shapes, op_axes))
+        out_shardings = ((in_shardings[0], None)
+                         if shape.kind == "train" else None)
+        t0 = time.perf_counter()
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*op_shapes)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+        fallbacks = [f"{s} {l} {n}->{a}" for s, l, n, a in
+                     recorded_fallbacks()]
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(mem)
+        print({k: v for k, v in cost.items()
+               if k in ("flops", "bytes accessed")})
+
+    # archive the HLO (zstd) so §Perf iterations re-analyze w/o recompiling
+    try:
+        import zstandard
+        with open(art_path(arch, shape_name, mesh_name)
+                  .replace(".json", ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=9).compress(
+                hlo.encode()))
+    except Exception:
+        pass
+    result["mesh"] = mesh_name  # tagged name (variant artifacts)
+
+    # trip-count-aware costs (XLA cost_analysis counts while bodies once —
+    # see launch/hlocost.py and tests/test_hlocost.py)
+    mc = HC.analyze_text(hlo)
+    roof = RL.analyze_module_cost(mc, V5E)
+    f64 = RL.check_no_f64(hlo)
+    mflops, formula = RL.model_flops(cfg, shape, chips)
+    hlo_flops_global = roof.flops_per_dev * chips
+
+    arg_b = mem.argument_size_in_bytes
+    tmp_b = mem.temp_size_in_bytes
+    out_b = mem.output_size_in_bytes
+    result.update(
+        chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        params=api.param_count(cfg),
+        params_active=cfg.param_count(active_only=True),
+        arg_bytes_per_dev=arg_b, temp_bytes_per_dev=tmp_b,
+        out_bytes_per_dev=out_b,
+        hbm_fit=bool(arg_b + tmp_b + out_b <= V5E.hbm_bytes),
+        roofline=roof.to_dict(),
+        xla_cost_analysis={k: cost.get(k, 0.0)
+                           for k in ("flops", "bytes accessed")},
+        model_flops=mflops, model_flops_formula=formula,
+        useful_ratio=(mflops / hlo_flops_global
+                      if hlo_flops_global else 0.0),
+        fallbacks=fallbacks,
+        f64_leaks=f64[:5],
+        hlo_ops=len(hlo.splitlines()),
+    )
+    if f64:
+        result["status"] = "f64-leak"
+    return result
+
+
+def art_path(arch, shape, mesh_name):
+    return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+# sweep order: cheapest-to-compile first, so the artifact dir fills with
+# signal early and the trillion-parameter cells run last
+SWEEP_ORDER = (
+    "mamba2-130m", "whisper-medium", "internvl2-2b", "olmoe-1b-7b",
+    "qwen1.5-32b", "deepseek-coder-33b", "command-r-35b",
+    "command-r-plus-104b", "jamba-1.5-large-398b", "kimi-k2-1t-a32b",
+)
+
+
+def cells():
+    for arch in SWEEP_ORDER:
+        for shape in SHAPES:
+            for mesh_name in ("single", "multi"):
+                yield arch, shape, mesh_name
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="variant tag for §Perf artifacts")
+    ap.add_argument("--rules", default=None,
+                    help='JSON rule overrides, e.g. {"seq": "model"}')
+    ap.add_argument("--cfg", default=None,
+                    help='JSON ModelConfig overrides, e.g. '
+                         '{"ssm_chunk": 128}')
+    ap.add_argument("--report", action="store_true",
+                    help="print a summary table from artifacts")
+    args = ap.parse_args()
+    os.makedirs(ART_DIR, exist_ok=True)
+
+    if args.report:
+        rows = []
+        for arch, shape, mesh_name in cells():
+            p = art_path(arch, shape, mesh_name)
+            if os.path.exists(p):
+                rows.append(json.load(open(p)))
+        print(json.dumps(rows, indent=1))
+        return 0
+
+    if args.all:
+        # each cell in a fresh interpreter: XLA state + memory isolation
+        import subprocess
+        failures = []
+        for arch, shape, mesh_name in cells():
+            p = art_path(arch, shape, mesh_name)
+            if os.path.exists(p) and not args.force:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_name]
+            print(">>", " ".join(cmd), flush=True)
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh_name))
+        print("failures:", failures)
+        return 1 if failures else 0
+
+    mesh_name = args.mesh + (f"@{args.tag}" if args.tag else "")
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       tag=args.tag,
+                       rule_overrides=json.loads(args.rules)
+                       if args.rules else None,
+                       cfg_overrides=json.loads(args.cfg)
+                       if args.cfg else None)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+               "status": "fail", "error": traceback.format_exc()[-4000:]}
+        with open(art_path(args.arch, args.shape, mesh_name), "w") as f:
+            json.dump(res, f, indent=1)
+        print(res["error"])
+        return 1
+    with open(art_path(args.arch, args.shape, mesh_name), "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("roofline",)}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

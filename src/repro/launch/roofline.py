@@ -1,0 +1,180 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = per-device HLO FLOPs / peak_FLOP/s
+    memory     = per-device HLO bytes accessed / HBM bandwidth
+    collective = per-device wire bytes / ICI link bandwidth
+
+``compiled.cost_analysis()`` FLOPs/bytes are per-partition (verified
+empirically for the SPMD CPU backend), so no chip division is needed.
+Collective bytes are NOT in cost_analysis: we parse the post-partitioning
+HLO text and sum the output-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, then convert to
+bytes-on-wire with the standard ring-algorithm factors:
+
+    all-reduce        2 (N-1)/N x bytes
+    all-gather          (N-1)/N x bytes      (bytes = gathered output)
+    reduce-scatter    (N-1)   x bytes        (bytes = scattered output)
+    all-to-all          (N-1)/N x bytes
+    collective-permute  1      x bytes
+
+N = collective group size, parsed from replica_groups (iota or explicit).
+Raw operand-byte sums are also reported (the assignment's literal metric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch.mesh import Hardware, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>.+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2   # conservative default when ungrouped
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    out_bytes: int = 0
+    wire_bytes: float = 0.0
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, CollectiveStats]:
+    """Per-op totals from post-SPMD HLO text (per-device shapes)."""
+    stats: Dict[str, CollectiveStats] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("out"))
+        n = _group_size(line)
+        s = stats.setdefault(op, CollectiveStats())
+        s.count += 1
+        s.out_bytes += out_bytes
+        s.wire_bytes += _WIRE_FACTOR[op](max(n, 2)) * out_bytes
+    return stats
+
+
+def check_no_f64(hlo_text: str) -> List[str]:
+    """x64 mode hygiene: the model path must not leak f64 compute."""
+    bad = []
+    for line in hlo_text.splitlines():
+        if re.search(r"=\s*f64\[", line):
+            bad.append(line.strip()[:120])
+    return bad
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    coll_out_bytes_per_dev: float
+    collectives: Dict[str, Dict]
+    dominant: str
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_module_cost(mc, hw: Hardware = V5E) -> Roofline:
+    """Roofline terms from a trip-count-aware hlocost.ModuleCost
+    (per-device, since post-SPMD HLO shapes are per-device)."""
+    terms = {
+        "compute": mc.flops / hw.peak_flops,
+        "memory": mc.hbm_bytes / hw.hbm_bw,
+        "collective": mc.wire_bytes / hw.ici_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], flops_per_dev=mc.flops,
+        bytes_per_dev=mc.hbm_bytes, wire_bytes_per_dev=mc.wire_bytes,
+        coll_out_bytes_per_dev=mc.coll_out_bytes,
+        collectives={k: {"count": v} for k, v in mc.coll_counts.items()},
+        dominant=dominant)
+
+
+def analyze(cost: Dict[str, float], hlo_text: str,
+            hw: Hardware = V5E) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    wire = sum(s.wire_bytes for s in colls.values())
+    raw = sum(s.out_bytes for s in colls.values())
+    terms = {
+        "compute": flops / hw.peak_flops,
+        "memory": bytes_acc / hw.hbm_bw,
+        "collective": wire / hw.ici_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], flops_per_dev=flops,
+        bytes_per_dev=bytes_acc, wire_bytes_per_dev=wire,
+        coll_out_bytes_per_dev=raw,
+        collectives={k: dataclasses.asdict(v) for k, v in colls.items()},
+        dominant=dominant)
+
+
+def model_flops(cfg, shape, chips: int) -> Tuple[float, str]:
+    """MODEL_FLOPS (global, matmul-only ideal): 6·N·D training,
+    2·N_active·D inference (D = tokens processed per step)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d, "6*N_active*D"
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d, "2*N_active*D"
+    d = shape.global_batch          # one token per sequence
+    return 2.0 * n_active * d, "2*N_active*B"

@@ -1,0 +1,173 @@
+"""Unified model API.
+
+One dispatch surface over the five family implementations so that the
+trainer, the serving engine, the dry-run, and the tests never branch on
+architecture:
+
+    specs / init_params / param_shapes / param_axes
+    loss(cfg)(params, batch)              -- training
+    prefill(cfg) / decode(cfg)            -- serving
+    cache_specs(cfg, batch, max_len)      -- decode-cache ShapeDtypeStructs
+    input_specs(cfg, shape)               -- per-(arch x shape) batch stand-ins
+
+``input_specs`` returns ShapeDtypeStruct stand-ins + logical-axes trees; the
+dry-run lowers against them with no allocation (same pattern for every cell
+of the 40-cell sweep).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as E
+from repro.models import hybrid as H
+from repro.models import mamba_lm as ML
+from repro.models import transformer as T
+from repro.models import params as P
+
+_FAMILY_MODULE = {
+    "dense": T, "moe": T, "vlm": T,
+    "ssm": ML, "hybrid": H, "encdec": E,
+}
+
+
+def module(cfg: ModelConfig):
+    return _FAMILY_MODULE[cfg.family]
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return module(cfg).specs(cfg)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Any:
+    return P.init_tree(param_specs(cfg), rng, cfg.param_dtype)
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    return P.shape_tree(param_specs(cfg), cfg.param_dtype)
+
+
+def param_axes(cfg: ModelConfig) -> Any:
+    return P.axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return P.param_count(param_specs(cfg))
+
+
+def loss(cfg: ModelConfig, params: Any, batch: Dict) -> Tuple[jax.Array, Dict]:
+    return module(cfg).loss(cfg, params, batch)
+
+
+def apply(cfg: ModelConfig, params: Any, batch: Dict):
+    return module(cfg).apply(cfg, params, batch)
+
+
+def prefill(cfg: ModelConfig, params: Any, tokens: jax.Array,
+            frontend=None):
+    return module(cfg).prefill(cfg, params, tokens, frontend)
+
+
+def decode_step(cfg: ModelConfig, params: Any, cache: Dict,
+                tokens: jax.Array):
+    return module(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int
+                ) -> Tuple[Dict, Dict]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.kv_cache_specs(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return ML.cache_specs(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return H.cache_specs(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return E.cache_specs(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# per-(arch x shape) input stand-ins
+# ---------------------------------------------------------------------------
+
+def _frontend_spec(cfg: ModelConfig, batch: int):
+    shape = (batch, cfg.num_frontend_tokens, cfg.d_model)
+    return (jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype)),
+            ("batch", "frames", None))
+
+
+def token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """vlm prepends patch embeddings inside the context budget, so its token
+    run is shorter; encdec frames live in a separate encoder sequence."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.num_frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for one sweep cell.
+
+    train   -> {tokens, targets[, frontend]}
+    prefill -> {tokens[, frontend]}
+    decode  -> {tokens (B,1), cache}  (serve_step: one new token against a
+               KV/SSD cache of ``seq_len``)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.dtype(jnp.int32)
+
+    if shape.kind == "train":
+        t = token_len(cfg, s)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t), i32),
+                 "targets": jax.ShapeDtypeStruct((b, t), i32)}
+        axes = {"tokens": ("batch", "seq"), "targets": ("batch", "seq")}
+        if cfg.family in ("vlm", "encdec"):
+            specs["frontend"], axes["frontend"] = _frontend_spec(cfg, b)
+        return specs, axes
+
+    if shape.kind == "prefill":
+        t = token_len(cfg, s)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        axes = {"tokens": ("batch", "seq")}
+        if cfg.family in ("vlm", "encdec"):
+            specs["frontend"], axes["frontend"] = _frontend_spec(cfg, b)
+        return specs, axes
+
+    if shape.kind == "decode":
+        cshapes, caxes = cache_specs(cfg, b, s)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                 "cache": cshapes}
+        axes = {"tokens": ("batch", None), "cache": caxes}
+        return specs, axes
+
+    raise ValueError(shape.kind)
+
+
+def pad_cache(cfg: ModelConfig, cache: Dict, max_len: int) -> Dict:
+    """Pad a fresh-from-prefill cache out to ``max_len`` KV slots so decode
+    steps can write past the prefill length (SSM caches are O(1) — no-op)."""
+    if cfg.family == "ssm":
+        return cache
+    out = dict(cache)
+    for key in ("k", "v"):
+        arr = cache[key]
+        pad = max_len - arr.shape[2]
+        if pad > 0:
+            out[key] = jnp.pad(
+                arr, [(0, 0), (0, 0), (0, pad)] +
+                [(0, 0)] * (arr.ndim - 3))
+    return out
+
+
+def make_zero_inputs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Materialized (tiny-config) inputs matching ``input_specs`` — used by
+    the smoke tests; never called on full-size configs."""
+    specs, _ = input_specs(cfg, shape)
+
+    def one(sds: jax.ShapeDtypeStruct):
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree.map(one, specs)

@@ -1,0 +1,228 @@
+"""Jamba-style hybrid LM (family "hybrid"): periods of ``attn_period`` layers
+with one attention layer per period (index ``attn_offset``) and Mamba2 mixers
+elsewhere; FFN alternates dense MLP / MoE by ``moe_period``.
+
+The layer stack is scanned over *periods* (the repeating unit), with the 8
+sub-layers unrolled inside the period body — HLO stays O(period), not
+O(num_layers).  The decode cache holds a KV cache only for the attention
+layers (1/8 of depth) plus O(1) SSD states: this is what makes ``long_500k``
+feasible, with the attention KV sharded over the "data" axis (sequence
+parallelism) under the long-context rule overrides.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import moe_ep as MEP
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def _is_attn(cfg: ModelConfig, i: int) -> bool:
+    return (i % cfg.attn_period) == cfg.attn_offset
+
+
+def _is_moe(cfg: ModelConfig, i: int) -> bool:
+    return bool(cfg.num_experts) and (i % cfg.moe_period) == cfg.moe_offset
+
+
+def num_periods(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_period == 0, (
+        "hybrid num_layers must be a multiple of attn_period")
+    return cfg.num_layers // cfg.attn_period
+
+
+def period_specs(cfg: ModelConfig) -> Dict:
+    subs = {}
+    for i in range(cfg.attn_period):
+        sub = {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+            "mixer": (L.attention_specs(cfg) if _is_attn(cfg, i)
+                      else S.ssm_specs(cfg)),
+            "ffn": (M.moe_specs(cfg) if _is_moe(cfg, i)
+                    else L.mlp_specs(cfg)),
+        }
+        subs[f"sub{i}"] = sub
+    return subs
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.embedding_specs(cfg),
+        "periods": T.stack_specs(period_specs(cfg), num_periods(cfg),
+                                 axis="periods"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _period_fwd(cfg: ModelConfig, pp: Dict, x: Array, positions: Array,
+                segment_ids: Optional[Array]) -> Tuple[Array, Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.attn_period):
+        p = pp[f"sub{i}"]
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if _is_attn(cfg, i):
+            mix = L.attention(cfg, p["mixer"], h, positions, segment_ids)
+        else:
+            mix = S.ssm_block(cfg, p["mixer"], h)
+        x = x + mix
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _is_moe(cfg, i):
+            ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+            f, aux = ffn(cfg, p["ffn"], h)
+            aux_total = aux_total + aux
+        else:
+            f = L.mlp(cfg, p["ffn"], h)
+        x = x + f
+        x = shard(x, "batch", "seq", None)
+    return x, aux_total
+
+
+def hidden_states(cfg: ModelConfig, params: Dict, batch: Dict
+                  ) -> Tuple[Array, Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    segment_ids = batch.get("segment_ids")
+
+    body = T.remat_wrap(cfg, functools.partial(
+        _period_fwd, cfg, positions=positions, segment_ids=segment_ids))
+    x, auxs = jax.lax.scan(lambda c, pp: body(pp, c), x, params["periods"])
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    return x, jnp.mean(auxs)
+
+
+def apply(cfg: ModelConfig, params: Dict, batch: Dict) -> Tuple[Array, Array]:
+    x, aux = hidden_states(cfg, params, batch)
+    return L.unembed(cfg, params["embed"], x), aux
+
+
+def loss(cfg: ModelConfig, params: Dict, batch: Dict,
+         aux_weight: float = 0.01) -> Tuple[Array, Dict]:
+    x, aux = hidden_states(cfg, params, batch)
+    ce, denom = T.chunked_xent(cfg, params["embed"], x,
+                               batch["targets"], batch.get("loss_mask"))
+    total = ce + aux_weight * aux
+    return total, {"loss": ce, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _mamba_subs(cfg: ModelConfig):
+    return [i for i in range(cfg.attn_period) if not _is_attn(cfg, i)]
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: Array,
+            frontend=None) -> Tuple[Dict, Array]:
+    del frontend
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, pp):
+        x = carry
+        kv = None
+        ssm_caches = {}
+        for i in range(cfg.attn_period):
+            p = pp[f"sub{i}"]
+            h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+            if _is_attn(cfg, i):
+                mix, kv = L.attention_prefill(cfg, p["mixer"], h, positions)
+            else:
+                mix, c = S.ssm_block(cfg, p["mixer"], h, return_cache=True)
+                ssm_caches[f"sub{i}"] = c
+            x = x + mix
+            h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if _is_moe(cfg, i):
+                ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+                f, _ = ffn(cfg, p["ffn"], h)
+            else:
+                f = L.mlp(cfg, p["ffn"], h)
+            x = x + f
+        return x, (kv, ssm_caches)
+
+    x, (kv, ssm_caches) = jax.lax.scan(body, x, params["periods"])
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    cache = {"k": kv[0], "v": kv[1], "ssm": ssm_caches,
+             "len": jnp.full((b,), s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: Array) -> Tuple[Array, Dict]:
+    pos = cache["len"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(carry, xs):
+        pp, kc, vc, ssm_c = xs
+        x = carry
+        new_ssm = {}
+        for i in range(cfg.attn_period):
+            p = pp[f"sub{i}"]
+            h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+            if _is_attn(cfg, i):
+                mix, kc, vc = L.attention_decode(
+                    cfg, p["mixer"], h, pos, kc, vc)
+            else:
+                mix, new_ssm[f"sub{i}"] = S.ssm_decode_step(
+                    cfg, p["mixer"], h, ssm_c[f"sub{i}"])
+            x = x + mix
+            h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if _is_moe(cfg, i):
+                ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+                f, _ = ffn(cfg, p["ffn"], h)
+            else:
+                f = L.mlp(cfg, p["ffn"], h)
+            x = x + f
+        return x, (kc, vc, new_ssm)
+
+    x, (k, v, ssm_caches) = jax.lax.scan(
+        body, x, (params["periods"], cache["k"], cache["v"], cache["ssm"]))
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    return logits, {"k": k, "v": v, "ssm": ssm_caches, "len": pos + 1}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int
+                ) -> Tuple[Dict, Dict]:
+    np_ = num_periods(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    sshapes, saxes = S.ssm_cache_specs(cfg, batch, dt)
+    shapes = {
+        "k": jax.ShapeDtypeStruct((np_, batch, max_len, kv, hd), dt),
+        "v": jax.ShapeDtypeStruct((np_, batch, max_len, kv, hd), dt),
+        "ssm": {f"sub{i}": {
+            k_: jax.ShapeDtypeStruct((np_,) + v_.shape, v_.dtype)
+            for k_, v_ in sshapes.items()} for i in _mamba_subs(cfg)},
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    axes = {
+        "k": ("periods", "batch", "kv_seq", "kv_heads", None),
+        "v": ("periods", "batch", "kv_seq", "kv_heads", None),
+        "ssm": {f"sub{i}": {k_: ("periods",) + v_ for k_, v_ in saxes.items()}
+                for i in _mamba_subs(cfg)},
+        "len": ("batch",),
+    }
+    return shapes, axes

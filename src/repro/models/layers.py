@@ -1,0 +1,360 @@
+"""Common transformer layers: RMSNorm, RoPE, GQA attention (train / prefill /
+decode with per-example cache positions, packing-aware masks), MLP, embedding.
+
+All functions are pure; parameters are nested dicts produced from the PSpec
+trees in each family module.  Activation sharding is expressed through
+``sharding.shard`` logical constraints so the same code lowers on any mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+                 # for fully-masked rows (padding slots in packed batches)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def rmsnorm_spec(d: int) -> PSpec:
+    return PSpec((d,), ("embed",), init="ones", dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate-half RoPE.  x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-jnp.log(theta) *
+                   jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq       # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]                            # (..., S, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rest = x[..., 2 * half:]
+    return jnp.concatenate(
+        [out1.astype(x.dtype), out2.astype(x.dtype), rest], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> Dict:
+    d = d_in or cfg.d_model
+    hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    specs = {
+        "wq": PSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = PSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = PSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        specs["bv"] = PSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return specs
+
+
+def _qkv(cfg: ModelConfig, p: Dict, x: Array) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _gqa_scores(q: Array, k: Array, q_per_kv: int) -> Array:
+    """q: (B,S,H,D) -> grouped (B,Kv,G,S,D); k: (B,T,Kv,D).
+    Returns fp32 scores (B,Kv,G,S,T)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, q_per_kv, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    return scores * (d ** -0.5)
+
+
+def _gqa_out(probs: Array, v: Array) -> Array:
+    """probs: (B,Kv,G,S,T); v: (B,T,Kv,D) -> (B,S,H,D)."""
+    b, kvh, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, kvh * g, v.shape[-1])
+
+
+def causal_mask(positions_q: Array, positions_k: Array,
+                seg_q: Optional[Array], seg_k: Optional[Array]) -> Array:
+    """(B,S,T) boolean mask: causal in *positions* and packing-aware."""
+    m = positions_q[:, :, None] >= positions_k[:, None, :]
+    if seg_q is not None:
+        m &= seg_q[:, :, None] == seg_k[:, None, :]
+    return m
+
+
+def _pick_block(s: int, cap: int = 1024) -> Optional[int]:
+    for b in (1024, 512, 256, 128):
+        if b <= cap and s % b == 0 and s > b:
+            return b
+    return None
+
+
+def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+          pos_q: Array, pos_k: Array,
+          seg_q: Optional[Array], seg_k: Optional[Array],
+          causal: bool) -> Array:
+    """Scaled-dot-product GQA attention with automatic online-softmax
+    chunking.  Never materializes (B,H,S,T) when S/T are large — the exact
+    property the Pallas flash kernel provides on TPU; this is the XLA path
+    used for lowering/dry-run and on CPU (see kernels/flash_attention.py for
+    the TPU kernel).  Returns (B,S,H,D)."""
+    s, t = q.shape[1], k.shape[1]
+    qb = _pick_block(s)
+    kb = _pick_block(t)
+    if qb is None or kb is None:
+        scores = _gqa_scores(q, k, cfg.q_per_kv)      # (B,Kv,G,S,T) fp32
+        if causal or seg_q is not None:
+            m = causal_mask(pos_q, pos_k, seg_q, seg_k) if causal else (
+                seg_q[:, :, None] == seg_k[:, None, :])
+            scores = jnp.where(m[:, None, None], scores, NEG_INF)
+        return _gqa_out(jax.nn.softmax(scores, axis=-1), v)
+    return _chunked_gqa(cfg, q, k, v, pos_q, pos_k, seg_q, seg_k,
+                        qb, kb, causal)
+
+
+def _chunked_gqa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                 pos_q: Array, pos_k: Array,
+                 seg_q: Optional[Array], seg_k: Optional[Array],
+                 q_block: int, kv_block: int, causal: bool) -> Array:
+    """Online-softmax (flash-style) attention in pure XLA: double lax.scan
+    over query and key/value blocks with running (m, l, o) statistics."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh, g = cfg.num_kv_heads, cfg.q_per_kv
+    nq, nk = s // q_block, t // kv_block
+    scale = d ** -0.5
+
+    qx = jnp.moveaxis(q.reshape(b, nq, q_block, kvh, g, d), 1, 0)
+    kx = jnp.moveaxis(k.reshape(b, nk, kv_block, kvh, d), 1, 0)
+    vx = jnp.moveaxis(v.reshape(b, nk, kv_block, kvh, d), 1, 0)
+    pqx = jnp.moveaxis(pos_q.reshape(b, nq, q_block), 1, 0)
+    pkx = jnp.moveaxis(pos_k.reshape(b, nk, kv_block), 1, 0)
+    has_seg = seg_q is not None
+    sqx = jnp.moveaxis(seg_q.reshape(b, nq, q_block), 1, 0) if has_seg else pqx
+    skx = jnp.moveaxis(seg_k.reshape(b, nk, kv_block), 1, 0) if has_seg else pkx
+
+    def q_step(_, qin):
+        qb_, pq_, sq_ = qin
+
+        def kv_step(carry, kin):
+            o, m, l = carry
+            kb_, vb_, pk_, sk_ = kin
+            sblk = jnp.einsum("bqkgd,btkd->bkgqt", qb_, kb_,
+                              preferred_element_type=jnp.float32) * scale
+            mask = None
+            if causal:
+                mask = pq_[:, :, None] >= pk_[:, None, :]
+            if has_seg:
+                segm = sq_[:, :, None] == sk_[:, None, :]
+                mask = segm if mask is None else (mask & segm)
+            if mask is not None:
+                sblk = jnp.where(mask[:, None, None], sblk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sblk, axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p, vb_.astype(jnp.float32))
+            o = o * alpha[..., None] + pv
+            return (o, m_new, l), None
+
+        init = (jnp.zeros((b, kvh, g, q_block, d), jnp.float32),
+                jnp.full((b, kvh, g, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, q_block), jnp.float32))
+        (o, _, l), _ = jax.lax.scan(kv_step, init, (kx, vx, pkx, skx))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, o
+
+    _, oblk = jax.lax.scan(q_step, None, (qx, pqx, sqx))
+    # (nq, B, Kv, G, Qb, D) -> (B, S, H, D)
+    out = jnp.transpose(oblk, (1, 0, 4, 2, 3, 5)).reshape(b, s, h, d)
+    return out.astype(v.dtype)
+
+
+def attention(cfg: ModelConfig, p: Dict, x: Array, positions: Array,
+              segment_ids: Optional[Array] = None,
+              causal: bool = True) -> Array:
+    """Full-sequence attention (train / encoder). x: (B,S,D)."""
+    q, k, v = _qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "act_seq", "heads", None)
+    k = shard(k, "batch", "act_seq", "kv_heads", None)
+    v = shard(v, "batch", "act_seq", "kv_heads", None)
+    out = _sdpa(cfg, q, k, v, positions, positions,
+                segment_ids, segment_ids, causal)
+    out = shard(out, "batch", "act_seq", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_prefill(cfg: ModelConfig, p: Dict, x: Array,
+                      positions: Array) -> Tuple[Array, Tuple[Array, Array]]:
+    """Like ``attention`` but also returns (k, v) for cache construction."""
+    q, k, v = _qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    out = _sdpa(cfg, q, k, v, positions, positions, None, None, True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def cross_attention_specs(cfg: ModelConfig) -> Dict:
+    return attention_specs(cfg)
+
+
+def cross_attention(cfg: ModelConfig, p: Dict, x: Array, enc: Array
+                    ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Encoder-decoder cross attention (no RoPE, no mask). x: (B,S,D),
+    enc: (B,F,D). Returns (out, (k,v)) so serving can cache encoder KV."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bfd,dhk->bfhk", enc, p["wk"].astype(enc.dtype))
+    v = jnp.einsum("bfd,dhk->bfhk", enc, p["wv"].astype(enc.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    y = cross_attention_apply(cfg, p, q, k, v)
+    return y, (k, v)
+
+
+def cross_attention_apply(cfg: ModelConfig, p: Dict, q: Array,
+                          k: Array, v: Array) -> Array:
+    b, s = q.shape[:2]
+    pos_q = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pos_k = jnp.broadcast_to(
+        jnp.arange(k.shape[1], dtype=jnp.int32), (b, k.shape[1]))
+    out = _sdpa(cfg, q, k, v, pos_q, pos_k, None, None, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(q.dtype))
+
+
+def cache_update(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
+                 pos: Array) -> Tuple[Array, Array]:
+    """Write one new token per example at per-example positions.
+    caches: (B, Smax, Kv, D); new: (B, 1, Kv, D); pos: (B,) int32."""
+    def upd(c, n, pi):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, pi, axis=0)
+    k_cache = jax.vmap(upd)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+    return k_cache, v_cache
+
+
+def attention_decode(cfg: ModelConfig, p: Dict, x: Array, pos: Array,
+                     k_cache: Array, v_cache: Array,
+                     ) -> Tuple[Array, Array, Array]:
+    """Single-token decode. x: (B,1,D); pos: (B,) current position;
+    caches: (B,Smax,Kv,D). Returns (out, k_cache, v_cache)."""
+    b, _, _ = x.shape
+    smax = k_cache.shape[1]
+    q, k_new, v_new = _qkv(cfg, p, x)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+    k_cache, v_cache = cache_update(k_cache, v_cache, k_new, v_new, pos)
+    k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", None)
+    scores = _gqa_scores(q, k_cache, cfg.q_per_kv)    # (B,Kv,G,1,Smax)
+    valid = jnp.arange(smax)[None] <= pos[:, None]    # (B,Smax)
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v_cache)                    # (B,1,H,D)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_variant == "swiglu":
+        return {
+            "w_gate": PSpec((d, f), ("embed", "ffn")),
+            "w_up": PSpec((d, f), ("embed", "ffn")),
+            "w_down": PSpec((f, d), ("ffn", "embed")),
+        }
+    return {
+        "w_in": PSpec((d, f), ("embed", "ffn")),
+        "b_in": PSpec((f,), ("ffn",), init="zeros"),
+        "w_out": PSpec((f, d), ("ffn", "embed")),
+        "b_out": PSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp(cfg: ModelConfig, p: Dict, x: Array) -> Array:
+    if cfg.mlp_variant == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+        h = shard(h, "batch", "act_seq", "ffn")
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h + p["b_in"].astype(x.dtype))
+    h = shard(h, "batch", "act_seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h,
+                      p["w_out"].astype(x.dtype)) + p["b_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_specs(cfg: ModelConfig) -> Dict:
+    specs = {
+        "tok": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                     init="embed"),
+        "norm_f": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = PSpec((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), init="embed")
+    return specs
+
+
+def embed(p: Dict, tokens: Array, dtype) -> Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def unembed(cfg: ModelConfig, p: Dict, x: Array) -> Array:
+    w = p.get("head", p["tok"])
+    logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.logits_softcap > 0:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return shard(logits, "batch", "logits_seq", "vocab")

@@ -1,0 +1,121 @@
+"""Mamba-2 language model (family "ssm"): embedding -> N x (norm + SSD mixer)
+-> final norm -> tied unembedding.  Attention-free; the decode cache is O(1)
+in context length, which is why this family serves the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.params import PSpec
+
+Array = jax.Array
+
+
+def layer_specs(cfg: ModelConfig) -> Dict:
+    return {"ln": L.rmsnorm_spec(cfg.d_model), "mixer": S.ssm_specs(cfg)}
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.embedding_specs(cfg),
+        "layers": T.stack_specs(layer_specs(cfg), cfg.num_layers),
+    }
+
+
+def _block(cfg: ModelConfig, p: Dict, x: Array) -> Array:
+    return x + S.ssm_block(cfg, p["mixer"],
+                           L.rmsnorm(x, p["ln"], cfg.norm_eps))
+
+
+def hidden_states(cfg: ModelConfig, params: Dict, batch: Dict
+                  ) -> Tuple[Array, Array]:
+    x = L.embed(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+    block = T.remat_wrap(cfg, functools.partial(_block, cfg))
+    x, _ = jax.lax.scan(lambda c, lp: (block(lp, c), None),
+                        x, params["layers"])
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def apply(cfg: ModelConfig, params: Dict, batch: Dict) -> Tuple[Array, Array]:
+    x, aux = hidden_states(cfg, params, batch)
+    return L.unembed(cfg, params["embed"], x), aux
+
+
+def loss(cfg: ModelConfig, params: Dict, batch: Dict,
+         aux_weight: float = 0.0) -> Tuple[Array, Dict]:
+    x, aux = hidden_states(cfg, params, batch)
+    ce, denom = T.chunked_xent(cfg, params["embed"], x,
+                               batch["targets"], batch.get("loss_mask"))
+    return ce, {"loss": ce, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: Array,
+            frontend=None) -> Tuple[Dict, Array]:
+    del frontend
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(carry, lp):
+        h = L.rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        out, cache = S.ssm_block(cfg, lp["mixer"], h, return_cache=True)
+        return carry + out, cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    caches["len"] = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    return caches, logits
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: Array) -> Tuple[Array, Dict]:
+    """tokens: (B,1). cache leaves carry a leading layer axis."""
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    layer_cache = {k: v for k, v in cache.items() if k != "len"}
+
+    def body(carry, xs):
+        lp, lc = xs
+        h = L.rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        out, lc = S.ssm_decode_step(cfg, lp["mixer"], h, lc)
+        return carry + out, lc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], layer_cache))
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int
+                ) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStructs + logical axes for the decode cache (leading layer
+    axis).  Constant-size in ``max_len`` — that's the SSD selling point."""
+    del max_len
+    shapes, axes = S.ssm_cache_specs(cfg, batch, jnp.dtype(cfg.dtype))
+    lshapes = {k: jax.ShapeDtypeStruct((cfg.num_layers,) + v.shape, v.dtype)
+               for k, v in shapes.items()}
+    laxes = {k: ("layers",) + v for k, v in axes.items()}
+    lshapes["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    laxes["len"] = ("batch",)
+    return lshapes, laxes
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    one = S.ssm_cache_init(cfg, batch, jnp.dtype(cfg.dtype))
+    cache = {k: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape)
+             for k, v in one.items()}
+    cache["len"] = jnp.zeros((batch,), jnp.int32)
+    return cache

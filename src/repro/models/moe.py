@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with TPU-friendly sort-based routing.
+
+TPU adaptation notes (DESIGN.md §2): GPU MoE kernels use atomics/scatter
+into per-expert buffers.  Here routing is a *sort*: token->expert assignments
+are argsorted so each expert's tokens are contiguous, bucketed into a dense
+(E, C, D) capacity buffer (static shapes — XLA/SPMD friendly), processed with
+batched einsums on the MXU, and combined back with a scatter-add.
+
+Two static layouts, chosen by token count at trace time:
+  * per-row routing (train/prefill): capacity is per (sequence-row, expert),
+    so routing is local to the "batch" sharding axis — no global sort across
+    data-parallel shards.  Expert dims shard over "model" (EP); SPMD inserts
+    the dispatch/combine all-to-alls.
+  * global routing (decode): few tokens, one global sort.
+
+Overflow tokens beyond capacity are dropped (standard Switch/GShard
+semantics); capacity_factor controls the drop rate.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+_GLOBAL_ROUTE_MAX_TOKENS = 4096  # decode-sized workloads use the global sort
+
+
+def moe_specs(cfg: ModelConfig) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": PSpec((d, e), ("embed", "experts"), dtype="float32"),
+        "w_gate": PSpec((e, d, f), ("experts", "embed", "ffn")),
+        "w_up": PSpec((e, d, f), ("experts", "embed", "ffn")),
+        "w_down": PSpec((e, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group *
+            cfg.experts_per_token / cfg.num_experts)
+    return max(8, _round_up(c, 8))
+
+
+def _route(logits: Array, k: int) -> Tuple[Array, Array]:
+    """Top-k routing probabilities. logits: (..., E) fp32.
+    Returns (weights (...,k), indices (...,k))."""
+    gate, idx = jax.lax.top_k(logits, k)
+    return jax.nn.softmax(gate, axis=-1), idx
+
+
+def _dispatch_combine(cfg: ModelConfig, p: Dict, x2d: Array,
+                      weights: Array, idx: Array, capacity: int) -> Array:
+    """Sort-based dispatch for a flat token group.
+    x2d: (T, D); weights/idx: (T, K).  Returns (T, D)."""
+    t, d = x2d.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tk = t * k
+
+    flat_e = idx.reshape(tk)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = weights.reshape(tk)
+
+    order = jnp.argsort(flat_e)                  # stable -> token order kept
+    se = flat_e[order]
+    st = flat_t[order]
+    sw = flat_w[order]
+
+    group_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos = jnp.arange(tk, dtype=jnp.int32) - group_start[se].astype(jnp.int32)
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)  # drop row
+
+    buf = jnp.zeros((e * capacity + 1, d), x2d.dtype)
+    buf = buf.at[slot].set(x2d[st], mode="drop")
+    buf = buf[:-1].reshape(e, capacity, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x2d.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x2d.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x2d.dtype))
+
+    out = out.reshape(e * capacity, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = out[slot] * (sw * keep).astype(out.dtype)[:, None]
+    y = jnp.zeros((t, d), x2d.dtype).at[st].add(gathered)
+    return y
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    weights, idx = _route(logits, cfg.experts_per_token)
+
+    # load-balancing auxiliary loss (Switch-style).  one_hot dtype pinned:
+    # under x64 its default is f64, which would leak into the whole step
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B,S,E)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], cfg.num_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+    if b * s <= _GLOBAL_ROUTE_MAX_TOKENS:
+        cap = _capacity(cfg, b * s)
+        y = _dispatch_combine(cfg, p, x.reshape(b * s, d),
+                              weights.reshape(b * s, -1),
+                              idx.reshape(b * s, -1), cap)
+        return y.reshape(b, s, d), aux
+
+    # per-row routing: every sequence row routes independently, so the sort
+    # and capacity buffers are local to the batch sharding.
+    cap = _capacity(cfg, s)
+    y = jax.vmap(lambda xr, wr, ir:
+                 _dispatch_combine(cfg, p, xr, wr, ir, cap))(x, weights, idx)
+    y = shard(y, "batch", "seq", None)
+    return y, aux

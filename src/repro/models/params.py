@@ -1,0 +1,83 @@
+"""Parameter-spec trees.
+
+A model is described by a pytree of ``PSpec`` (shape + logical axes + init).
+From one spec tree we derive: real initialized arrays (smoke tests, examples),
+``ShapeDtypeStruct`` stand-ins (dry-run lowering — no allocation), and the
+logical-axes tree consumed by ``models.sharding.tree_shardings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | embed | zeros | ones | small
+    scale: float = 1.0
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _std(spec: PSpec) -> float:
+    if spec.init == "embed":
+        return 0.02 * spec.scale
+    if spec.init == "small":
+        return 1e-3 * spec.scale
+    # lecun-style: fan-in is the second-to-last dim for rank>=2 (layer-stacked
+    # params share the same per-layer fan-in, so the leading dims are ignored)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    return spec.scale / np.sqrt(max(fan_in, 1))
+
+
+def init_tree(specs: Any, rng: jax.Array, default_dtype: str) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def one(spec: PSpec, key):
+        dt = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * _std(spec)).astype(dt)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, rngs)])
+
+
+def shape_tree(specs: Any, default_dtype: str) -> Any:
+    def one(spec: PSpec):
+        return jax.ShapeDtypeStruct(
+            spec.shape, jnp.dtype(spec.dtype or default_dtype))
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_bytes(specs: Any, default_dtype: str) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=_is_spec):
+        n = int(np.prod(s.shape)) if s.shape else 1
+        total += n * jnp.dtype(s.dtype or default_dtype).itemsize
+    return total
+
+
+def param_count(specs: Any) -> int:
+    return sum(int(np.prod(s.shape)) if s.shape else 1
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

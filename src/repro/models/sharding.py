@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "heads", "ffn", "experts", "batch", "kv_seq", ...).  A rules table
+maps logical names to physical mesh axes.  This indirection is the main
+hillclimbing lever in EXPERIMENTS.md §Perf: changing a rule re-lowers the
+whole program with a different partitioning, no model edits.
+
+Divisibility fallback: if a tensor dim is not divisible by the mapped mesh
+axis size (e.g. qwen1.5's 40 heads on a 16-way model axis) the rule silently
+degrades to replication for that dim, so every (arch x shape x mesh) cell in
+the dry-run sweep lowers.  Fallbacks are recorded and surfaced by dryrun.py.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, Axis]
+
+# Default production rules: DP over pod+data, FSDP(param) over data,
+# TP/EP over model.  See DESIGN.md §4.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,             # residual-stream sequence dim (SP shards this)
+    "act_seq": None,         # sequence dim INSIDE attention/MLP (stays
+                             # unsharded under SP so TP axes win the specs)
+    "logits_seq": None,      # sequence dim of logits (vocab TP has priority)
+    "kv_seq": None,          # long-context decode overrides this to "data"
+    "embed": "data",         # FSDP axis for parameters
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "state": None,           # SSM state dim
+    "ssm_heads": "model",
+    "inner": "model",        # mamba d_inner
+    "conv": None,
+    "layers": None,
+    "periods": None,
+    "frames": None,
+    "stack": None,
+}
+
+LONG_CONTEXT_OVERRIDES: Rules = {
+    "kv_seq": "data",        # sequence-parallel KV cache / scan chunks
+    "batch": "pod",
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = dict(DEFAULT_RULES)
+        self.fallbacks: list = []
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Activate a mesh + logical rules for model tracing."""
+    prev = (_ctx.mesh, _ctx.rules, _ctx.fallbacks)
+    _ctx.mesh = mesh
+    _ctx.rules = dict(DEFAULT_RULES)
+    if rules:
+        _ctx.rules.update(rules)
+    _ctx.fallbacks = []
+    try:
+        yield _ctx
+    finally:
+        _ctx.mesh, _ctx.rules, _ctx.fallbacks = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def recorded_fallbacks() -> list:
+    return list(_ctx.fallbacks)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape.get(axis, 1)
+    n = 1
+    for a in axis:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _present(mesh: Mesh, axis: Axis) -> Axis:
+    """Drop mesh axes that do not exist on this mesh (e.g. 'pod' single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.shape else None
+    kept = tuple(a for a in axis if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None, rules: Optional[Rules] = None) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names, applying
+    the divisibility fallback. ``logical`` may be shorter than rank (trailing
+    dims replicate)."""
+    mesh = mesh or _ctx.mesh
+    rules = rules or _ctx.rules
+    if mesh is None:
+        return P()
+    parts = []
+    used: set = set()
+    for i, dim in enumerate(shape):
+        name = logical[i] if i < len(logical) else None
+        axis = _present(mesh, rules.get(name)) if name else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if axis is not None:
+            flat = (axis,) if isinstance(axis, str) else tuple(axis)
+            if any(a in used for a in flat):
+                axis = None
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            _ctx.fallbacks.append((tuple(shape), tuple(logical), name, axis))
+            axis = None
+        if axis is not None:
+            flat = (axis,) if isinstance(axis, str) else tuple(axis)
+            used.update(flat)
+        parts.append(axis)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint to an activation (no-op when no
+    mesh is active, so unit tests and the single-device path are untouched)."""
+    if _ctx.mesh is None:
+        return x
+    spec = spec_for(x.shape, logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ctx.mesh, spec))
+
+
+def tree_shardings(tree_shapes: Any, tree_logical: Any,
+                   mesh: Optional[Mesh] = None,
+                   rules: Optional[Rules] = None) -> Any:
+    """NamedShardings for a pytree of ShapeDtypeStructs given a matching
+    pytree of logical-axis tuples (used for in_shardings at lower time)."""
+    mesh = mesh or _ctx.mesh
+    rules = rules or _ctx.rules
+
+    def one(shape_struct, logical):
+        return NamedSharding(
+            mesh, spec_for(shape_struct.shape, logical, mesh, rules))
+
+    return jax.tree.map(one, tree_shapes, tree_logical,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+computation is a masked (decay-weighted) attention-like GEMM — MXU friendly —
+and across chunks a tiny state recurrence (B,H,P,N) runs in a lax.scan.
+Decode is the O(1) recurrent step on the same state, which is why the
+``long_500k`` shape is only runnable for the SSM/hybrid families: the decode
+"cache" does not grow with context length.
+
+Numerics: all decay exponents are cumulative sums of negative increments, so
+every exp() argument is <= 0 — no overflow anywhere in the chunked path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import PSpec
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    return {
+        "w_z": PSpec((d, di), ("embed", "inner")),
+        "w_x": PSpec((d, di), ("embed", "inner")),
+        "w_B": PSpec((d, n), ("embed", "state")),
+        "w_C": PSpec((d, n), ("embed", "state")),
+        "w_dt": PSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": PSpec((w, di), ("conv", "inner"), init="normal"),
+        "conv_B": PSpec((w, n), ("conv", "state"), init="normal"),
+        "conv_C": PSpec((w, n), ("conv", "state"), init="normal"),
+        "dt_bias": PSpec((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "A_log": PSpec((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "D": PSpec((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "norm": PSpec((di,), ("inner",), init="ones", dtype="float32"),
+        "w_out": PSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: Array, kernel: Array) -> Array:
+    """Depthwise causal conv. x: (B,S,C); kernel: (W,C)."""
+    w = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(w):
+        acc = acc + pad[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+    return acc
+
+
+def _proj_in(cfg: ModelConfig, p: Dict, x: Array):
+    dt_f = x.dtype
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(dt_f))
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(dt_f))
+    b = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_f))
+    c = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_f))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_f))
+    return z, xin, b, c, dt
+
+
+def ssd_chunked(cfg: ModelConfig, xh: Array, dt: Array, b: Array, c: Array,
+                a_log: Array, init_state: Array = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+    xh: (B,S,H,P); dt: (B,S,H) fp32; b,c: (B,S,N); a_log: (H,) fp32 (=A<0).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, pdim = xh.shape
+    n = b.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xdt = (xh.astype(jnp.float32) * dt[..., None])       # (B,S,H,P)
+    a = dt * a_log                                       # (B,S,H)  <= 0
+
+    def chunk(v, last):
+        return v.reshape(bsz, nc, q, *v.shape[2:]) if not last else v
+
+    a_c = a.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(a_c, axis=2)                        # (B,NC,Q,H)
+    xdt_c = xdt.reshape(bsz, nc, q, h, pdim)
+    b_c = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    c_c = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    # ---- intra-chunk (attention-like dual form) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    g_mat = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)       # (B,NC,Q,Q)
+    m_mat = g_mat[..., None] * l_mat                      # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m_mat, xdt_c)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,NC,Q,H) <= 1
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                         b_c, decay_to_end, xdt_c)        # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,NC,H)
+
+    # ---- inter-chunk recurrence ----
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+
+    def step(state, inp):
+        dec, s_c = inp                                    # (B,H), (B,H,P,N)
+        entering = state
+        state = dec[:, :, None, None] * state + s_c
+        return state, entering
+
+    final_state, states_in = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)             # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         c_c, jnp.exp(cum), states_in)
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)
+    return y.astype(xh.dtype), final_state
+
+
+def ssm_block(cfg: ModelConfig, p: Dict, x: Array,
+              return_cache: bool = False):
+    """Full Mamba2 mixer over a sequence. x: (B,S,D).
+    With ``return_cache`` also returns the O(1) decode cache (conv tails +
+    final SSD state) so prefill can hand off to the recurrent decode step."""
+    bsz, s, _ = x.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_headdim
+    w = cfg.ssm_conv
+    z, xin_r, b_r, c_r, dt = _proj_in(cfg, p, x)
+    xin = jax.nn.silu(_causal_conv(xin_r, p["conv_x"]))
+    b = jax.nn.silu(_causal_conv(b_r, p["conv_B"]))
+    c = jax.nn.silu(_causal_conv(c_r, p["conv_C"]))
+    xin = shard(xin, "batch", "seq", "inner")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_log = -jnp.exp(p["A_log"])
+    xh = xin.reshape(bsz, s, h, pdim)
+    y, final_state = ssd_chunked(cfg, xh, dt, b, c, a_log)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    if not return_cache:
+        return out
+    cache = {"conv_x": xin_r[:, s - (w - 1):],
+             "conv_B": b_r[:, s - (w - 1):],
+             "conv_C": c_r[:, s - (w - 1):],
+             "state": final_state}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, n = cfg.d_inner, cfg.ssm_state
+    w = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, n), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, n),
+                           jnp.float32),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    """(shape-struct, logical-axes) for dry-run lowering."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    w = cfg.ssm_conv
+    shapes = {
+        "conv_x": jax.ShapeDtypeStruct((batch, w - 1, di), dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, w - 1, n), dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, w - 1, n), dtype),
+        "state": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, n), jnp.float32),
+    }
+    axes = {
+        "conv_x": ("batch", None, "inner"),
+        "conv_B": ("batch", None, "state"),
+        "conv_C": ("batch", None, "state"),
+        "state": ("batch", "ssm_heads", None, None),
+    }
+    return shapes, axes
+
+
+def _conv_step(buf: Array, new: Array, kernel: Array) -> Tuple[Array, Array]:
+    """buf: (B,W-1,C) previous raw inputs; new: (B,C). Returns (y, buf')."""
+    win = jnp.concatenate([buf, new[:, None]], axis=1)     # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", win, kernel.astype(win.dtype))
+    return y, win[:, 1:]
+
+
+def ssm_decode_step(cfg: ModelConfig, p: Dict, x: Array, cache: Dict
+                    ) -> Tuple[Array, Dict]:
+    """One-token recurrent step. x: (B,1,D). Returns (out (B,1,D), cache')."""
+    bsz = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xin_r, b_r, c_r, dt = _proj_in(cfg, p, x)
+    z, xin_r, b_r, c_r, dt = (v[:, 0] for v in (z, xin_r, b_r, c_r, dt))
+
+    xin, conv_x = _conv_step(cache["conv_x"], xin_r, p["conv_x"])
+    b, conv_b = _conv_step(cache["conv_B"], b_r, p["conv_B"])
+    c, conv_c = _conv_step(cache["conv_C"], c_r, p["conv_C"])
+    xin, b, c = jax.nn.silu(xin), jax.nn.silu(b), jax.nn.silu(c)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    decay = jnp.exp(dt * -jnp.exp(p["A_log"]))                    # (B,H)
+    xh = xin.reshape(bsz, h, pdim).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    state = cache["state"] * decay[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xdt, b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"].astype(x.dtype))
+    cache = {"conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c,
+             "state": state}
+    return out[:, None], cache

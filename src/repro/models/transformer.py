@@ -1,0 +1,298 @@
+"""Decoder-only transformer LM (families: dense, moe, vlm).
+
+Layers are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` so the lowered HLO is O(1) in depth — essential for
+compiling 60+-layer trillion-parameter configs in the multi-pod dry-run.
+Remat policy is configurable per arch (none / dots / full).
+
+The vlm family prepends ``num_frontend_tokens`` precomputed patch embeddings
+(the modality frontend is a stub per the assignment; ``input_specs`` provides
+the embeddings).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import moe_ep as MEP
+from repro.models.params import PSpec
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def stack_specs(specs: Any, n: int, axis: str = "layers") -> Any:
+    """Prepend a stacked-layer dim to every PSpec leaf."""
+    def one(s: PSpec) -> PSpec:
+        return PSpec((n,) + s.shape, (axis,) + s.axes, s.init, s.scale,
+                     s.dtype)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig) -> Dict:
+    specs = {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.num_experts and cfg.moe_period == 1:
+        specs["moe"] = M.moe_specs(cfg)
+    else:
+        specs["mlp"] = L.mlp_specs(cfg)
+    return specs
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.embedding_specs(cfg),
+        "layers": stack_specs(layer_specs(cfg), cfg.num_layers),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, p: Dict, x: Array, positions: Array,
+                 segment_ids: Optional[Array]) -> Tuple[Array, Array]:
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attention(cfg, p["attn"], h, positions, segment_ids)
+    x = shard(x, "batch", "seq", None)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+        f, aux = ffn(cfg, p["moe"], h)
+    else:
+        f, aux = L.mlp(cfg, p["mlp"], h), jnp.zeros((), jnp.float32)
+    x = x + f
+    return shard(x, "batch", "seq", None), aux
+
+
+def _forward(cfg: ModelConfig, params: Dict, x: Array, positions: Array,
+             segment_ids: Optional[Array]) -> Tuple[Array, Array]:
+    """Run the layer stack. Returns (hidden, mean aux loss)."""
+    block = remat_wrap(
+        cfg, functools.partial(_block_train, cfg,
+                               positions=positions, segment_ids=segment_ids))
+
+    def body(carry, lp):
+        y, aux = block(lp, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+    return x, jnp.mean(auxs)
+
+
+def _inputs_embed(cfg: ModelConfig, params: Dict, tokens: Array,
+                  frontend: Optional[Array]) -> Tuple[Array, Array]:
+    """Token (+ frontend stub) embedding. Returns (x, positions)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    b, s = tokens.shape
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(dtype), x], axis=1)
+        s = s + frontend.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+# ---------------------------------------------------------------------------
+# training forward / loss
+# ---------------------------------------------------------------------------
+
+def apply(cfg: ModelConfig, params: Dict, batch: Dict) -> Tuple[Array, Array]:
+    """Training forward returning full logits (small/smoke workloads only —
+    production training uses ``loss`` which never materializes them)."""
+    x, aux = hidden_states(cfg, params, batch)
+    return L.unembed(cfg, params["embed"], x), aux
+
+
+def loss(cfg: ModelConfig, params: Dict, batch: Dict,
+         aux_weight: float = 0.01) -> Tuple[Array, Dict]:
+    """Training loss.  The hidden states are unembedded in sequence chunks
+    (rematerialized in the backward pass) so the full (B,S,V) logits tensor
+    — petabytes for the 256k-vocab archs at global_batch 256 x 4k — never
+    exists."""
+    hidden, aux = hidden_states(cfg, params, batch)
+    ce, denom = chunked_xent(cfg, params["embed"], hidden,
+                             batch["targets"], batch.get("loss_mask"))
+    total = ce + aux_weight * aux
+    return total, {"loss": ce, "aux": aux, "tokens": denom}
+
+
+def hidden_states(cfg: ModelConfig, params: Dict, batch: Dict
+                  ) -> Tuple[Array, Array]:
+    """Final-norm hidden states over the *token* positions (frontend stub
+    positions trimmed). Returns (x (B,S,D), aux)."""
+    frontend = batch.get("frontend")
+    if frontend is None and cfg.num_frontend_tokens and cfg.family == "vlm":
+        frontend = jnp.zeros(
+            (batch["tokens"].shape[0], cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    x, default_pos = _inputs_embed(cfg, params, batch["tokens"], frontend)
+    nf = 0 if frontend is None else frontend.shape[1]
+    positions = batch.get("positions")
+    segment_ids = batch.get("segment_ids")
+    if positions is not None and nf:
+        fpos = jnp.broadcast_to(jnp.arange(nf, dtype=jnp.int32),
+                                (x.shape[0], nf))
+        positions = jnp.concatenate([fpos, positions + nf], axis=1)
+        if segment_ids is not None:
+            fseg = jnp.ones((x.shape[0], nf), segment_ids.dtype)
+            segment_ids = jnp.concatenate([fseg, segment_ids], axis=1)
+    if positions is None:
+        positions = default_pos
+    x, aux = _forward(cfg, params, x, positions, segment_ids)
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    if nf:
+        x = x[:, nf:]
+    return x, aux
+
+
+def chunked_xent(cfg: ModelConfig, embed_params: Dict, hidden: Array,
+                 targets: Array, mask: Optional[Array],
+                 chunk: int = 512) -> Tuple[Array, Array]:
+    """Cross-entropy via a scan over sequence chunks; each chunk's logits are
+    recomputed in the backward pass (jax.checkpoint)."""
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    if s % chunk != 0 or s <= chunk:
+        logits = L.unembed(cfg, embed_params, hidden)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(nll * mask) / denom, denom
+
+    nc = s // chunk
+    hx = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    tx = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+    mx = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def step(acc, xs):
+        hb, tb, mb = xs
+        logits = L.unembed(cfg, embed_params, hb)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tb[..., None], axis=-1)[..., 0]
+        return (acc[0] + jnp.sum(nll * mb), acc[1] + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hx, tx, mx))
+    denom = jnp.maximum(cnt, 1.0)
+    return tot / denom, denom
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _block_prefill(cfg, p, x, positions):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, kv = L.attention_prefill(cfg, p["attn"], h, positions)
+    x = x + a
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+        f, _ = ffn(cfg, p["moe"], h)
+    else:
+        f = L.mlp(cfg, p["mlp"], h)
+    return x + f, kv
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: Array,
+            frontend: Optional[Array] = None) -> Tuple[Dict, Array]:
+    """Returns (cache {k,v:(L,B,S,Kv,hd), len:(B,)}, logits (B,V) at last)."""
+    if frontend is None and cfg.num_frontend_tokens and cfg.family == "vlm":
+        frontend = jnp.zeros(
+            (tokens.shape[0], cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    x, positions = _inputs_embed(cfg, params, tokens, frontend)
+
+    def body(carry, lp):
+        y, kv = _block_prefill(cfg, lp, carry, positions)
+        return y, kv
+
+    x, (k, v) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    cache = {"k": k, "v": v,
+             "len": jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)}
+    return cache, logits
+
+
+def _block_decode(cfg, p, x, pos, k_cache, v_cache):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, k_cache, v_cache = L.attention_decode(
+        cfg, p["attn"], h, pos, k_cache, v_cache)
+    x = x + a
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ffn = MEP.moe_ffn_ep if cfg.moe_ep else M.moe_ffn
+        f, _ = ffn(cfg, p["moe"], h)
+    else:
+        f = L.mlp(cfg, p["mlp"], h)
+    return x + f, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: Array) -> Tuple[Array, Dict]:
+    """One decode step. tokens: (B,1); cache k/v: (L,B,Smax,Kv,hd).
+    Returns (logits (B,V), new cache)."""
+    pos = cache["len"]                                    # (B,)
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        y, kc, vc = _block_decode(cfg, lp, carry, pos, kc, vc)
+        return y, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"],
+                                       cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    return logits, {"k": k, "v": v, "len": pos + 1}
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int
+                   ) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStructs + logical axes for a decode cache."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    shapes = {
+        "k": jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, max_len, kv, hd), dt),
+        "v": jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, max_len, kv, hd), dt),
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    axes = {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "len": ("batch",),
+    }
+    return shapes, axes

@@ -1,0 +1,2 @@
+from repro.runtime.elastic import remesh_shardings  # noqa: F401
+from repro.runtime.fault import retry  # noqa: F401

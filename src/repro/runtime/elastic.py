@@ -1,0 +1,39 @@
+"""Elastic scaling: checkpoint -> remesh -> reshard-on-restore.
+
+JAX SPMD programs are fixed-mesh, so elasticity (the Hyracks scheduler's
+dynamic node sets) is realized at restart boundaries: when the live device
+set changes, rebuild the mesh from whatever is alive, re-derive every
+sharding from the *logical* axis rules (models/sharding.py — the rules are
+mesh-shape-agnostic), and restore the latest checkpoint with per-leaf
+``device_put`` resharding (ckpt/checkpoint.py).  Nothing about the model or
+step function changes — the same lowering just repartitions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.sharding import Rules, tree_shardings
+
+
+def build_mesh(devices: Optional[Sequence] = None,
+               model_parallel: int = 1,
+               axis_names: Tuple[str, str] = ("data", "model")) -> Mesh:
+    """Mesh over the live device set: data-parallel dim absorbs whatever
+    count survives, model dim is the requested TP width."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert n % model_parallel == 0, (n, model_parallel)
+    import numpy as np
+    arr = np.array(devices).reshape(n // model_parallel, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def remesh_shardings(shape_tree: Any, axes_tree: Any, mesh: Mesh,
+                     rules: Optional[Rules] = None) -> Any:
+    """NamedShardings for ``shape_tree`` on a (possibly new) mesh — the
+    reshard plan handed to ckpt.restore after a device-set change."""
+    return tree_shardings(shape_tree, axes_tree, mesh=mesh, rules=rules)

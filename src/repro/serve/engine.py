@@ -1,0 +1,154 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed pool of ``slots`` decode lanes shares one batched KV/SSD cache.
+Incoming requests are prefillled one at a time (prompt lengths bucketed to
+bound the number of compiled prefill shapes) and spliced into a free slot
+with ``dynamic_update_slice``; the decode step always runs the full batch,
+and finished slots are immediately refilled between steps — decode
+utilization does not drain while long requests finish (the serving-side
+analog of the paper's decoupled intake/compute jobs: admission never blocks
+the compute loop).
+
+Bucketed prefill correctness: the prompt is right-padded to the bucket, the
+slot's ``len`` is reset to the true prompt length, and the first-token
+logits are taken at the true last position.  Junk cache rows beyond the
+true length are overwritten by the decode writes before the causal mask can
+ever expose them (attention families).  SSM/hybrid caches carry recurrent
+state, so those families use exact-length prefill (no bucketing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    stop_at_eos: bool = True
+    rid: int = dataclasses.field(default_factory=itertools.count().__next__)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 256, prompt_bucket: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.bucket = prompt_bucket if cfg.family not in ("ssm", "hybrid") \
+            else 1
+        cshapes, _ = api.cache_specs(cfg, slots, max_len)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cshapes)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.decode_steps = 0
+        self.prefills = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, t, fe: api.prefill(cfg, p, t, fe))
+        self._apply = jax.jit(lambda p, b: api.apply(cfg, p, b))
+
+    # ----------------------------------------------------------------- admin
+    def submit(self, req: Request) -> Request:
+        self.queue.append(req)
+        return req
+
+    def _insert(self, slot: int, req: Request) -> None:
+        true_len = len(req.prompt)
+        blen = _round_up(true_len, self.bucket)
+        prompt = np.zeros((1, blen), np.int32)
+        prompt[0, :true_len] = req.prompt
+        tokens = jnp.asarray(prompt)
+        frontend = None
+        if self.cfg.family in ("vlm", "encdec"):
+            frontend = jnp.zeros(
+                (1, self.cfg.num_frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        cache1, _ = self._prefill(self.params, tokens, frontend)
+        cache1 = api.pad_cache(self.cfg, cache1, self.max_len)
+        self.prefills += 1
+        # first-token logits at the true last prompt position
+        batch = {"tokens": tokens}
+        if frontend is not None:
+            batch["frontend"] = frontend
+        logits, _ = self._apply(self.params, batch)
+        nf = (self.cfg.num_frontend_tokens
+              if self.cfg.family == "vlm" else 0)
+        first = int(jnp.argmax(logits[0, true_len - 1]))
+
+        new_cache = {}
+        for key, full in self.cache.items():
+            if key == "len":
+                new_cache[key] = full.at[slot].set(true_len + nf)
+            else:   # splice the single-request cache into batch slot
+                new_cache[key] = jax.tree.map(
+                    lambda f, s: jax.lax.dynamic_update_slice(
+                        f, s.astype(f.dtype),
+                        (0, slot) + (0,) * (f.ndim - 2)),
+                    full, cache1[key])
+        self.cache = new_cache
+        req.tokens.append(first)
+        self.active[slot] = req
+        if req.stop_at_eos and first == EOS:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self.active[slot]
+        req.done = True
+        self.completed.append(req)
+        self.active[slot] = None
+
+    # ------------------------------------------------------------------ run
+    def step(self) -> bool:
+        """Admit + one decode step.  Returns False when fully idle."""
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self._insert(slot, self.queue.pop(0))
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return bool(self.queue)
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            tok[s, 0] = self.active[s].tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tok))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in live:
+            req = self.active[s]
+            t = int(nxt[s])
+            req.tokens.append(t)
+            if (req.stop_at_eos and t == EOS) or \
+                    len(req.tokens) >= req.max_new_tokens or \
+                    len(req.prompt) + len(req.tokens) >= self.max_len - 1:
+                self._finish(s)
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        done, self.completed = self.completed, []
+        return done

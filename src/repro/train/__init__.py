@@ -1,0 +1,8 @@
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update  # noqa: F401
+from repro.train.steps import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_train_step,
+    train_state_axes,
+    train_state_shapes,
+)

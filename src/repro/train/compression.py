@@ -1,0 +1,100 @@
+"""int8 error-feedback gradient compression (distributed-optimization
+trick for bandwidth-bound DP meshes).
+
+Used on the explicit-collective path (shard_map DP): each worker quantizes
+its local gradient to int8 with a per-block fp32 scale before the
+all-reduce, and keeps the quantization residual in an error buffer that is
+added back into the next step's gradient — the classic EF-SGD construction
+that keeps SGD/Adam convergence despite 4x less collective traffic.
+
+Pure functions; the trainer owns the error-buffer tree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), flat.shape[0]
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """g -> (int8 values, per-block fp32 scales)."""
+    flat, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, n: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """(grads + error) -> (compressed tree of (q, scale), new error tree).
+
+    The returned error is the residual (g + e) - dequant(quant(g + e)).
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s, g.shape, g.size)
+        return (q, s), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree.unflatten(tdef, [c for c, _ in out])
+    new_err = jax.tree.unflatten(tdef, [e for _, e in out])
+    return comp, new_err
+
+
+def decompress_tree(comp: Any, like: Any) -> Any:
+    def one(c, g):
+        q, s = c
+        return dequantize(q, s, g.shape, g.size).astype(jnp.float32)
+
+    flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, tuple))
+    flat_g, tdef = jax.tree.flatten(like)
+    return jax.tree.unflatten(tdef, [one(c, g) for c, g
+                                     in zip(flat_c, flat_g)])
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def psum_compressed(grads: Any, error: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """Error-feedback compressed data-parallel mean, for use inside
+    shard_map: quantize locally, move int8 payloads (+1.5% fp32 scales)
+    over the interconnect via all_gather, dequantize-and-mean locally.
+    Exact mean of the per-worker *dequantized* gradients — the EF residual
+    accounts for precisely the local quantization error."""
+    comp, new_err = compress_tree(grads, error)
+
+    def reduce_one(c, g):
+        q, s = c
+        n = jax.lax.psum(1, axis_name)
+        qall = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+        sall = jax.lax.all_gather(s, axis_name)
+        per = qall.astype(jnp.float32) * sall[:, :, None]
+        mean = jnp.sum(per, axis=0) / n
+        return mean.reshape(-1)[:g.size].reshape(g.shape)
+
+    flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, tuple)
+                             and len(x) == 2)
+    flat_g, tdef = jax.tree.flatten(grads)
+    out = [reduce_one(c, g) for c, g in zip(flat_c, flat_g)]
+    return jax.tree.unflatten(tdef, out), new_err

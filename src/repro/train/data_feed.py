@@ -1,0 +1,87 @@
+"""The LM data plane: an IDEA feed whose computing jobs tokenize (and
+optionally safety-filter) the incoming stream, with a sink that packs the
+enriched records into dense (B, S) training batches.
+
+This is the paper's pipeline doing real work for training: the
+safety-check UDF's SensitiveWords lexicon is *reference data* — upserting a
+keyword mid-training immediately changes which records enter the training
+stream (Model-2 freshness), with zero recompilation (predeployed jobs).
+Adaptive data curation for free.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core import FeedConfig, FeedManager, SyntheticAdapter
+from repro.core.enrich import queries as Q
+from repro.data.packing import StreamPacker
+
+
+class FeedDataSource:
+    """Iterator of packed LM batches, produced by a live IDEA feed."""
+
+    def __init__(self, manager: FeedManager, vocab_size: int,
+                 seq_len: int, batch_size: int,
+                 total_records: int = 100_000,
+                 frame_size: int = 256,
+                 safety_filter: bool = False,
+                 num_partitions: int = 2,
+                 seed: int = 0,
+                 queue_batches: int = 8):
+        self.packer = StreamPacker(seq_len, batch_size)
+        self._q: "queue.Queue[Optional[Dict]]" = queue.Queue(queue_batches)
+        self._packer_lock = threading.Lock()
+        tokenize = Q.make_lm_tokenize(vocab_size)
+        if safety_filter:
+            udf = Q.chain("curated_lm_stream", Q.UDF2, tokenize)
+        else:
+            udf = tokenize
+        self.filtered = 0
+
+        def sink(batch: Dict[str, np.ndarray]) -> None:
+            keep = batch["valid"]
+            if safety_filter:
+                red = batch["safety_check_flag"] != 0
+                self.filtered += int((keep & red).sum())
+                keep = keep & ~red
+            with self._packer_lock:
+                for i in np.where(keep)[0]:
+                    ids = [int(t) for t in batch["lm_tokens"][i] if t != 0]
+                    if not ids:
+                        continue
+                    out = self.packer.add(ids)
+                    if out is not None:
+                        self._q.put(out)
+
+        cfg = FeedConfig(name=f"lm-data-{seed}", udf=udf,
+                         batch_size=frame_size,
+                         num_partitions=num_partitions, sink=sink)
+        self.handle = manager.start(
+            cfg, SyntheticAdapter(total=total_records,
+                                  frame_size=frame_size, seed=seed))
+        self._drained = False
+        threading.Thread(target=self._drain, daemon=True).start()
+
+    def _drain(self):
+        try:
+            self.handle.join()
+            out = self.packer.flush()
+            if out is not None:
+                self._q.put(out)
+        finally:
+            self._q.put(None)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item
+
+    def stop(self):
+        self.handle.stop()

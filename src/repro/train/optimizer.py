@@ -1,0 +1,134 @@
+"""AdamW in pure JAX, with the memory knobs the trillion-parameter dry-run
+configs require:
+
+  * ``state_dtype``   — bf16 first/second moments for the huge archs,
+  * ``factored_v``    — Adafactor-style rank-1 second moment for >=2-D
+                        params (v is stored as row/col means), shrinking
+                        optimizer state from 2x to ~1x param bytes,
+  * global-norm gradient clipping, decoupled weight decay,
+  * linear-warmup + cosine-decay schedule.
+
+Optimizer state mirrors the parameter tree (same logical axes), so the same
+sharding rules shard it — ZeRO-style, for free, through ``tree_shardings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # moments dtype
+    factored_v: bool = False         # rank-1 second moment for >=2-D params
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1 - floor) * cos)
+
+
+def _factored(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_init(cfg: OptConfig, params: Any) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def m_like(p):
+        return jnp.zeros(p.shape, dt)
+
+    def v_like(p):
+        if cfg.factored_v and _factored(p):
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                     jnp.float32)}
+        return jnp.zeros(p.shape, dt)
+
+    return {"m": jax.tree.map(m_like, params),
+            "v": jax.tree.map(v_like, params)}
+
+
+def _vhat(cfg: OptConfig, v, g2: jax.Array) -> Tuple[Any, jax.Array]:
+    """Update the second moment and return (new_v, per-element estimate)."""
+    if isinstance(v, dict):                       # factored
+        row = cfg.b2 * v["row"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+        col = cfg.b2 * v["col"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+        denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+        est = (row / denom)[..., None] * col[..., None, :]
+        return {"row": row, "col": col}, est
+    new_v = (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g2)
+    return new_v.astype(v.dtype), new_v
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any,
+                 opt_state: Dict[str, Any], step: jax.Array
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2c = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2, vest = _vhat(cfg, v, jnp.square(g))
+        mhat = m2 / b1c
+        vhat = (vest.astype(jnp.float32) if not isinstance(v2, dict)
+                else vest) / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                            # decoupled weight decay
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m2.astype(m.dtype))
+        new_v.append(v2)
+
+    params = jax.tree.unflatten(tdef, new_p)
+    opt_state = {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v)}
+    return params, opt_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_axes(cfg: OptConfig, param_axes: Any) -> Dict[str, Any]:
+    """Logical axes for the optimizer state (mirrors params; factored v
+    drops the factored dim)."""
+    def v_axes(ax):
+        if cfg.factored_v and len(ax) >= 2:
+            return {"row": tuple(ax[:-1]), "col": tuple(ax[:-2] + ax[-1:])}
+        return ax
+
+    is_ax = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        e is None or isinstance(e, str) for e in x)
+    return {"m": param_axes,
+            "v": jax.tree.map(v_axes, param_axes, is_leaf=is_ax)}

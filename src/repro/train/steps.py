@@ -1,0 +1,111 @@
+"""Train state + jit-able train step (one definition for all 10 archs).
+
+The step is built once per (model config, opt config) and AOT-compiles in
+the dry-run exactly like the enrichment computing jobs — same predeploy
+pattern, one level up.  Microbatch gradient accumulation happens inside the
+step via lax.scan (keeps the HLO O(1) in the accumulation factor); the
+batch dims stay sharded over (pod, data) so XLA inserts the gradient
+reduce-scatter/all-reduce where the sharding demands it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models import params as P
+from repro.train.optimizer import (OptConfig, adamw_init, adamw_update,
+                                   opt_state_axes)
+
+TrainState = Dict[str, Any]        # {"params", "opt", "step"}
+
+
+def init_train_state(cfg: ModelConfig, opt: OptConfig,
+                     rng: jax.Array) -> TrainState:
+    params = api.init_params(cfg, rng)
+    return {"params": params, "opt": adamw_init(opt, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(cfg: ModelConfig, opt: OptConfig) -> TrainState:
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    params = api.param_shapes(cfg)
+    dt = jnp.dtype(opt.state_dtype)
+
+    def m_like(p):
+        return jax.ShapeDtypeStruct(p.shape, dt)
+
+    def v_like(p):
+        if opt.factored_v and len(p.shape) >= 2:
+            return {"row": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                    "col": jax.ShapeDtypeStruct(
+                        p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jax.ShapeDtypeStruct(p.shape, dt)
+
+    return {"params": params,
+            "opt": {"m": jax.tree.map(m_like, params),
+                    "v": jax.tree.map(v_like, params)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(cfg: ModelConfig, opt: OptConfig) -> TrainState:
+    axes = api.param_axes(cfg)
+    return {"params": axes, "opt": opt_state_axes(opt, axes),
+            "step": ()}
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    microbatches: int = 1, aux_weight: float = 0.01):
+    """Returns step(state, batch) -> (state, metrics).  ``microbatches``
+    splits the per-step batch along dim 0 and accumulates grads in fp32."""
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches)
+                             + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, microbatch):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, microbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                acc, grads)
+            return (acc, loss_acc + loss / microbatches), metrics
+
+        (grads, loss), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mb)
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = accumulate(state["params"], batch)
+        params, opt_state, om = adamw_update(
+            opt, state["params"], grads, state["opt"], state["step"])
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        out = {"loss": loss, **{k: v for k, v in metrics.items()
+                                if k != "loss"}, **om}
+        return new_state, out
+
+    return step

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED config of the same family (small
+width/depth, few experts, tiny vocab) and runs:
+  * one jitted training loss + grad step on CPU — asserts finite scalars,
+  * prefill + two decode steps — asserts logits shapes, finiteness, and
+    cache-length bookkeeping.
+
+Full-size configs are exercised only by the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, smoke_config
+from repro.models import api
+
+SEQ = 32
+BATCH = 2
+
+
+def _smoke_batch(cfg, rng):
+    t = api.token_len(cfg, SEQ)
+    tokens = jax.random.randint(rng, (BATCH, t), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    batch = {"tokens": tokens,
+             "targets": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family in ("vlm", "encdec"):
+        batch["frontend"] = jax.random.normal(
+            rng, (BATCH, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    params = api.init_params(cfg, jax.random.key(0))
+    batch = _smoke_batch(cfg, jax.random.key(1))
+
+    def loss_fn(p, b):
+        l, metrics = api.loss(cfg, p, b)
+        return l, metrics
+
+    (l, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params, batch)
+    assert np.isfinite(float(l)), (arch, l)
+    assert float(l) > 0
+    # a correct smoke init predicts ~uniform: loss ~= log(vocab)
+    assert float(l) < np.log(cfg.vocab_size) + 2.0
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_smoke(arch):
+    cfg = smoke_config(arch)
+    params = api.init_params(cfg, jax.random.key(0))
+    t = api.token_len(cfg, SEQ // 2)
+    tokens = jax.random.randint(jax.random.key(2), (BATCH, t), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    frontend = None
+    if cfg.family in ("vlm", "encdec"):
+        frontend = jnp.zeros((BATCH, cfg.num_frontend_tokens, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+
+    cache, logits = jax.jit(
+        lambda p, tk, fe: api.prefill(cfg, p, tk, fe))(params, tokens,
+                                                       frontend)
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    cache = api.pad_cache(cfg, cache, SEQ)
+    step = jax.jit(lambda p, c, tk: api.decode_step(cfg, p, c, tk))
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for i in range(2):
+        logits, cache = step(params, cache, nxt)
+        assert logits.shape == (BATCH, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # vlm counts its prepended patch embeddings as cache positions
+    nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
+    np.testing.assert_array_equal(np.asarray(cache["len"]),
+                                  np.full((BATCH,), t + nf + 2))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_registered(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.param_count() > 0
+    # every full config exposes dry-run input specs for all applicable shapes
+    from repro.configs import SHAPES, shape_applicable
+    for shape in SHAPES.values():
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            assert "full-attention" in why
+            continue
+        specs, axes = api.input_specs(cfg, shape)
+        assert jax.tree.structure(specs) == jax.tree.structure(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def test_decode_matches_prefill_logits():
+    """Prefill of n+1 tokens must equal prefill(n) + decode(token n).
+    This is the KV-cache correctness invariant, checked on the dense family
+    (shared attention path for dense/moe/vlm)."""
+    cfg = smoke_config("deepseek-coder-33b")
+    params = api.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(3), (1, 9), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    _, logits_full = api.prefill(cfg, params, tokens)
+    cache, _ = api.prefill(cfg, params, tokens[:, :-1])
+    cache = api.pad_cache(cfg, cache, 16)
+    logits_dec, _ = api.decode_step(cfg, params, cache, tokens[:, -1:])
+    np.testing.assert_allclose(np.asarray(logits_full),
+                               np.asarray(logits_dec), rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_matches_prefill():
+    """Recurrent decode must continue the chunked-SSD prefill exactly."""
+    cfg = smoke_config("mamba2-130m")
+    params = api.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(4), (1, 17), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    # chunked path needs multiples of the chunk (8): prefill 16, decode 1
+    _, logits_full = api.prefill(cfg, params, tokens[:, :16])
+    cache, _ = api.prefill(cfg, params, tokens[:, :8])
+    for i in range(8, 16):
+        logits_dec, cache = api.decode_step(cfg, params, cache,
+                                            tokens[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(logits_full),
+                               np.asarray(logits_dec), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,34 @@
+"""Dry-run machinery integration test: one cheap cell end-to-end in a
+subprocess (512 placeholder devices never touch this process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_produces_roofline_artifact(tmp_path):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-130m", "--shape", "decode_32k",
+         "--mesh", "single", "--tag", "testrun"],
+        cwd="/root/repo", env=env, capture_output=True, text=True,
+        timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    art = ("launch_artifacts/dryrun/"
+           "mamba2-130m__decode_32k__single@testrun.json")
+    r = json.load(open(art))
+    assert r["status"] == "ok"
+    assert r["chips"] == 256
+    rf = r["roofline"]
+    assert rf["flops_per_dev"] > 0
+    assert rf["memory_s"] > 0
+    assert rf["dominant"] in ("compute", "memory", "collective")
+    assert not r["f64_leaks"]
+    # decode is memory-bound on any sane reading of the hardware
+    assert rf["dominant"] != "compute"
+    os.remove(art)

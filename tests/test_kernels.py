@@ -1,0 +1,198 @@
+"""Pallas kernel validation: interpret=True on CPU, swept over shapes and
+dtypes, assert_allclose against the pure-jnp oracles (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.refdata import KEY_SENTINEL
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.hash_probe import ref as hp_ref
+from repro.kernels.hash_probe.kernel import sorted_probe_pallas
+from repro.kernels.segment_reduce import ref as sr_ref
+from repro.kernels.segment_reduce.kernel import segment_sum_pallas
+from repro.kernels.spatial_join import ref as sj_ref
+from repro.kernels.spatial_join.kernel import radius_join_pallas
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("r,s", [(100, 7), (2048, 128), (5000, 300),
+                                 (1, 1), (4097, 129)])
+def test_segment_sum_kernel(dtype, r, s):
+    rng = np.random.default_rng(r + s)
+    vals = jnp.asarray(rng.integers(0, 100, r).astype(dtype))
+    seg = jnp.asarray(rng.integers(0, s, r).astype(np.int32))
+    got = segment_sum_pallas(vals, seg, s, block_r=512, interpret=True)
+    want = sr_ref.segment_sum(vals, seg, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_segment_sum_kernel_drops_out_of_range():
+    vals = jnp.asarray(np.array([1, 2, 3], np.int32))
+    seg = jnp.asarray(np.array([0, 5, 0], np.int32))   # 5 >= num_segments
+    got = segment_sum_pallas(vals, seg, 2, block_r=512, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), [4, 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 200), st.integers(0, 2**31))
+def test_segment_sum_kernel_property(r, s, seed):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=r).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, s, r).astype(np.int32))
+    got = segment_sum_pallas(vals, seg, s, block_r=256, interpret=True)
+    want = sr_ref.segment_sum(vals, seg, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hash_probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,r,cap", [(10, 8, 16), (600, 3000, 4096),
+                                     (1, 1, 4), (513, 2049, 2100)])
+def test_sorted_probe_kernel(b, r, cap):
+    rng = np.random.default_rng(b * r)
+    ref_real = rng.choice(10 * r, r, replace=False).astype(np.int64)
+    keys = np.full((cap,), KEY_SENTINEL, np.int64)
+    keys[:r] = np.sort(ref_real)
+    probe = rng.integers(0, 12 * r, b).astype(np.int64)
+    probe[0] = ref_real[0]                       # at least one hit
+    kj, rj = jnp.asarray(probe), jnp.asarray(keys)
+    gi, gf = sorted_probe_pallas(kj, rj, block_b=128, block_r=512,
+                                 interpret=True)
+    wi, wf = hp_ref.sorted_probe(kj, rj)
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_sorted_probe_kernel_64bit_keys():
+    """Hash keys above 2^32 exercise the (hi, lo) int32 split."""
+    keys = np.sort(np.array([2**40 + 7, 2**55 + 1, 5], np.int64))
+    cap = np.concatenate([keys, [KEY_SENTINEL]])
+    probe = jnp.asarray(np.array([2**55 + 1, 2**40 + 7, 2**40 + 8, 5,
+                                  KEY_SENTINEL], np.int64))
+    gi, gf = sorted_probe_pallas(probe, jnp.asarray(cap), interpret=True)
+    np.testing.assert_array_equal(np.asarray(gf),
+                                  [True, True, False, True, False])
+    np.testing.assert_array_equal(np.asarray(gi), [2, 1, -1, 0, -1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 1000), st.integers(0, 2**31))
+def test_sorted_probe_kernel_property(b, r, seed):
+    rng = np.random.default_rng(seed)
+    ref_real = rng.choice(5 * r, r, replace=False).astype(np.int64)
+    keys = jnp.asarray(np.sort(ref_real))
+    probe = jnp.asarray(rng.integers(0, 6 * r, b).astype(np.int64))
+    gi, gf = sorted_probe_pallas(probe, keys, block_b=128, block_r=256,
+                                 interpret=True)
+    wi, wf = hp_ref.sorted_probe(probe, keys)
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+# ---------------------------------------------------------------------------
+# spatial_join
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,r,k", [(40, 60, 3), (300, 2000, 8), (1, 1, 2),
+                                   (257, 1025, 1)])
+def test_radius_join_kernel(b, r, k):
+    rng = np.random.default_rng(b + r + k)
+    px = jnp.asarray(rng.uniform(-10, 10, b).astype(np.float32))
+    py = jnp.asarray(rng.uniform(-10, 10, b).astype(np.float32))
+    rx = jnp.asarray(rng.uniform(-10, 10, r).astype(np.float32))
+    ry = jnp.asarray(rng.uniform(-10, 10, r).astype(np.float32))
+    valid = jnp.asarray((rng.random(r) < 0.9))
+    gi, gd, gc = radius_join_pallas(px, py, rx, ry, 4.0, k, valid,
+                                    block_b=128, block_r=256,
+                                    interpret=True)
+    wi, wd, wc = sj_ref.radius_join(px, py, rx, ry, 4.0, k, valid)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 600), st.integers(1, 6),
+       st.integers(0, 2**31))
+def test_radius_join_kernel_property(b, r, k, seed):
+    rng = np.random.default_rng(seed)
+    px = jnp.asarray(rng.uniform(-8, 8, b).astype(np.float32))
+    py = jnp.asarray(rng.uniform(-8, 8, b).astype(np.float32))
+    rx = jnp.asarray(rng.uniform(-8, 8, r).astype(np.float32))
+    ry = jnp.asarray(rng.uniform(-8, 8, r).astype(np.float32))
+    gi, gd, gc = radius_join_pallas(px, py, rx, ry, 3.0, k,
+                                    block_b=64, block_r=128, interpret=True)
+    wi, wd, wc = sj_ref.radius_join(px, py, rx, ry, 3.0, k)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 256, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 384, 4, 1, 128),     # MQA, odd seq blocks
+    (1, 128, 4, 4, 112),     # kimi-k2 head_dim (padded to 128)
+])
+def test_flash_attention_kernel(dtype, b, s, h, kv, d):
+    rng = np.random.default_rng(s + h + d)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32),
+                    dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)).astype(np.float32),
+                    dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)).astype(np.float32),
+                    dtype=dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=128,
+                                 block_k=128, interpret=True)
+    want = fa_ref.flash_attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=False, interpret=True)
+    want = fa_ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """The kernel and the model's XLA chunked path agree — they are two
+    lowerings of the same attention (layers._sdpa is the dry-run path)."""
+    from repro.configs import smoke_config
+    from repro.models import layers as L
+    cfg = smoke_config("deepseek-coder-33b").replace(
+        num_heads=4, num_kv_heads=2, head_dim=64)
+    rng = np.random.default_rng(1)
+    b, s, d = 1, 256, 64
+    q = jnp.asarray(rng.normal(size=(b, s, 4, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, 2, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, 2, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    want = L._sdpa(cfg, q, k, v, pos, pos, None, None, causal=True)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

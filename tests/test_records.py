@@ -1,0 +1,51 @@
+"""Record schema / parser / tokenizer invariants (hypothesis properties)."""
+
+import json
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import records
+from repro.data.tokenizer import PAD, RESERVED, HashTokenizer
+
+
+def test_parse_roundtrip_fields():
+    src = records.SyntheticTweets(seed=5)
+    lines = src.raw_lines(50)
+    batch = records.parse_json_lines(lines)
+    for i, raw in enumerate(lines):
+        rec = json.loads(raw)
+        assert batch["id"][i] == rec["id"]
+        assert batch["country"][i] == rec["country"]
+        assert abs(batch["lat"][i] - rec["lat"]) < 1e-4
+        assert batch["created_at"][i] == rec["created_at"]
+        assert batch["user_name_hash"][i] == records.hash64(rec["user"])
+        words = rec["text"].split()[:records.TEXT_TOKENS]
+        for j, w in enumerate(words):
+            assert batch["text_tokens"][i, j] == records.hash64(w)
+    assert batch["valid"].all()
+
+
+def test_hash64_stable_and_63bit():
+    assert records.hash64("bomb") == records.hash64("bomb")
+    assert records.hash64("a") != records.hash64("b")
+    for w in ("", "x", "unicode-ü", "long" * 50):
+        h = records.hash64(w)
+        assert 0 <= h < 2 ** 63
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 64))
+def test_pad_batch_preserves_then_invalidates(n, extra):
+    src = records.SyntheticTweets(seed=1)
+    b = records.parse_json_lines(src.raw_lines(n))
+    p = records.pad_batch(b, n + extra)
+    assert p["valid"][:n].all() and not p["valid"][n:].any()
+    np.testing.assert_array_equal(p["id"][:n], b["id"])
+
+
+def test_tokenizer_fold_range():
+    tok = HashTokenizer(1000)
+    ids = tok.fold(np.array([0, 1, records.hash64("word")], np.int64))
+    assert ids[0] == PAD
+    assert (ids[1:] >= RESERVED).all() and (ids[1:] < 1000).all()

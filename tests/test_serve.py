@@ -1,0 +1,79 @@
+"""Serving engine tests: continuous batching correctness — slot splicing,
+bucketed prefill, and parity with naive one-at-a-time generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import api
+from repro.serve import Request, ServingEngine
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    """Naive single-request generation (prefill exact + decode loop)."""
+    tokens = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    frontend = None
+    if cfg.family in ("vlm", "encdec"):
+        frontend = jnp.zeros((1, cfg.num_frontend_tokens, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+    cache, logits = api.prefill(cfg, params, tokens, frontend)
+    cache = api.pad_cache(cfg, cache, 128)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        logits, cache = api.decode_step(
+            cfg, params, cache,
+            jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b", "olmoe-1b-7b",
+                                  "mamba2-130m"])
+def test_engine_matches_naive_generation(arch):
+    cfg = smoke_config(arch)
+    params = api.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    n_new = 6
+    prompts = [rng.integers(16, cfg.vocab_size, 8).tolist()
+               for _ in range(5)]
+    engine = ServingEngine(cfg, params, slots=2, max_len=128)
+    reqs = [engine.submit(Request(p, max_new_tokens=n_new,
+                                  stop_at_eos=False)) for p in prompts]
+    done = engine.run()
+    assert len(done) == 5
+    for req, prompt in zip(reqs, prompts):
+        want = _greedy_reference(cfg, params, prompt, n_new)
+        assert req.tokens == want, (req.rid, req.tokens, want)
+
+
+def test_engine_continuous_refill():
+    """More requests than slots: finished slots refill without draining."""
+    cfg = smoke_config("deepseek-coder-33b")
+    params = api.init_params(cfg, jax.random.key(0))
+    engine = ServingEngine(cfg, params, slots=2, max_len=64)
+    for i in range(6):
+        engine.submit(Request([20 + i, 21, 22, 23], max_new_tokens=3,
+                              stop_at_eos=False))
+    done = engine.run()
+    assert len(done) == 6
+    assert all(len(r.tokens) == 3 for r in done)
+    # 6 requests x 3 tokens on 2 slots needs >= 6 decode steps, but far
+    # fewer than 18 (continuous batching actually batched)
+    assert 6 <= engine.decode_steps <= 14
+
+
+def test_engine_bucketed_prefill_correct():
+    """Prompt lengths off the bucket boundary still decode correctly
+    (the junk-overwrite invariant)."""
+    cfg = smoke_config("deepseek-coder-33b")
+    params = api.init_params(cfg, jax.random.key(0))
+    prompt = [17, 18, 19]               # bucket pads to 16
+    engine = ServingEngine(cfg, params, slots=1, max_len=64,
+                           prompt_bucket=16)
+    req = engine.submit(Request(prompt, max_new_tokens=5,
+                                stop_at_eos=False))
+    engine.run()
+    want = _greedy_reference(cfg, params, prompt, 5)
+    assert req.tokens == want

@@ -1,0 +1,262 @@
+"""Q1-Q7 + UDF1/UDF2 against brute-force numpy oracles on small-scale
+reference tables, plus the Model-1/2/3 freshness semantics of §5.3 — the
+paper's central correctness claim."""
+
+import numpy as np
+import pytest
+
+from repro.core import ComputingRunner, ComputingSpec, RefStore
+from repro.core import records
+from repro.core.enrich import queries as Q
+from repro.core.records import SyntheticTweets, parse_json_lines
+from repro.core.refdata import KEY_SENTINEL
+
+SCALE = 0.002   # 50k-row tables -> 100 rows; persons/suspicious -> 2000
+
+
+@pytest.fixture(scope="module")
+def store():
+    s = RefStore()
+    Q.make_reference_tables(s, scale=SCALE, seed=7)
+    return s
+
+
+@pytest.fixture(scope="module")
+def tweets():
+    src = SyntheticTweets(seed=3)
+    return parse_json_lines(src.raw_lines(64))
+
+
+def run_udf(store, udf, batch, model="per_batch", refresh="always"):
+    runner = ComputingRunner(
+        ComputingSpec(udf, batch["id"].shape[0], model, refresh), store)
+    return runner, runner.run(batch)
+
+
+def snap(store, name):
+    s = store[name].snapshot()
+    valid = s.arrays["key"] != KEY_SENTINEL
+    return s.arrays, valid
+
+
+# ---------------------------------------------------------------------------
+# individual UDFs vs oracles
+# ---------------------------------------------------------------------------
+
+def test_q1_safety_level(store, tweets):
+    _, out = run_udf(store, Q.Q1, tweets)
+    arrays, valid = snap(store, "safety_levels")
+    table = {int(k): int(v) for k, v, ok in
+             zip(arrays["key"], arrays["safety_level"], valid) if ok}
+    for i in range(len(tweets["id"])):
+        want = table.get(int(tweets["country"][i]), -1)
+        assert out["safety_level"][i] == want
+
+
+def test_q2_religious_population(store, tweets):
+    _, out = run_udf(store, Q.Q2, tweets)
+    arrays, valid = snap(store, "religious_populations")
+    for i in range(len(tweets["id"])):
+        c = int(tweets["country"][i])
+        want = int(arrays["population"][(arrays["country"] == c)
+                                        & valid].sum())
+        assert out["religious_population"][i] == want
+
+
+def test_q3_largest_religions(store, tweets):
+    _, out = run_udf(store, Q.Q3, tweets)
+    arrays, valid = snap(store, "religious_populations")
+    for i in range(len(tweets["id"])):
+        c = int(tweets["country"][i])
+        rows = np.where((arrays["country"] == c) & valid)[0]
+        want_vals = sorted(arrays["population"][rows], reverse=True)[:3]
+        got = out["largest_religions"][i]
+        got_rows = [r for r in got if r >= 0]
+        assert len(got_rows) == len(want_vals)
+        # religions claimed must be real rows of this country with the
+        # right (multiset of) populations
+        got_vals = []
+        for rel in got_rows:
+            match = rows[arrays["religion"][rows] == rel]
+            assert match.size > 0
+            got_vals.append(int(arrays["population"][match].max()))
+        assert sorted(got_vals, reverse=True)[:len(want_vals)] == \
+            sorted(want_vals, reverse=True) or \
+            sorted(got_vals, reverse=True) == want_vals
+
+
+def test_q4_nearby_monuments(store, tweets):
+    _, out = run_udf(store, Q.Q4, tweets)
+    arrays, valid = snap(store, "monuments")
+    pts = np.stack([tweets["lat"], tweets["lon"]], 1)
+    refs = np.stack([arrays["lat"], arrays["lon"]], 1)
+    d2 = ((pts[:, None] - refs[None]) ** 2).sum(-1)
+    d2 = np.where(valid[None, :], d2, np.inf)
+    for i in range(len(tweets["id"])):
+        hits = np.where(d2[i] <= Q.Q4_RADIUS ** 2)[0]
+        assert out["nearby_monument_count"][i] == len(hits)
+        want_ids = set(arrays["key"][hits[np.argsort(d2[i][hits])][
+            :Q.Q4_K]].tolist())
+        got_ids = set(int(g) for g in out["nearby_monuments"][i] if g >= 0)
+        assert got_ids == want_ids
+
+
+def test_q5_suspicious_names(store, tweets):
+    _, out = run_udf(store, Q.Q5, tweets)
+    sn, sn_valid = snap(store, "suspicious_names")
+    threat = {int(k): int(t) for k, t, ok in
+              zip(sn["key"], sn["threat_level"], sn_valid) if ok}
+    fac, fac_valid = snap(store, "facilities")
+    pts = np.stack([tweets["lat"], tweets["lon"]], 1)
+    frefs = np.stack([fac["lat"], fac["lon"]], 1)
+    fd2 = ((pts[:, None] - frefs[None]) ** 2).sum(-1)
+    for i in range(len(tweets["id"])):
+        assert out["suspect_threat_level"][i] == threat.get(
+            int(tweets["user_name_hash"][i]), -1)
+        hits = (fd2[i] <= Q.Q5_RADIUS ** 2) & fac_valid
+        for ft in range(Q.NUM_FACILITY_TYPES):
+            assert out["nearby_facility_counts"][i][ft] == \
+                int((hits & (fac["ftype"] == ft)).sum())
+
+
+def test_q6_tweet_context(store, tweets):
+    _, out = run_udf(store, Q.Q6, tweets)
+    dst, dvalid = snap(store, "district_areas")
+    inc, ivalid = snap(store, "average_incomes")
+    per, pvalid = snap(store, "persons")
+    income = {int(k): float(v) for k, v, ok in
+              zip(inc["key"], inc["income"], ivalid) if ok}
+
+    def district_of(lat, lon):
+        inside = ((lat >= dst["xmin"]) & (lon >= dst["ymin"])
+                  & (lat <= dst["xmax"]) & (lon <= dst["ymax"]) & dvalid)
+        hits = np.where(inside)[0]
+        return int(hits[0]) if hits.size else -1
+
+    for i in range(0, len(tweets["id"]), 7):
+        d = district_of(tweets["lat"][i], tweets["lon"][i])
+        assert out["district"][i] == d
+        if d < 0:
+            assert out["area_avg_income"][i] == 0.0
+            continue
+        assert abs(out["area_avg_income"][i]
+                   - income.get(int(dst["key"][d]), 0.0)) < 1e-3
+        # ethnicity distribution oracle for this district
+        pin = ((per["lat"] >= dst["xmin"][d]) & (per["lon"] >= dst["ymin"][d])
+               & (per["lat"] <= dst["xmax"][d])
+               & (per["lon"] <= dst["ymax"][d]) & pvalid)
+        # person counts only in their FIRST matching district
+        for j in np.where(pin)[0]:
+            if district_of(per["lat"][j], per["lon"][j]) != d:
+                pin[j] = False
+        for e in range(Q.NUM_ETHNICITIES):
+            assert out["area_ethnicity_dist"][i][e] == \
+                int((pin & (per["ethnicity"] == e)).sum())
+
+
+def test_q7_worrisome(store, tweets):
+    _, out = run_udf(store, Q.Q7, tweets)
+    ev, evalid = snap(store, "attack_events")
+    for i in range(len(tweets["id"])):
+        t = int(tweets["created_at"][i])
+        for k in range(Q.Q7_K):
+            rel = int(out["nearby_religions"][i][k])
+            if rel < 0:
+                assert out["religion_attack_counts"][i][k] == 0
+                continue
+            want = int(((ev["religion"] == rel) & evalid
+                        & (ev["time"] < t)
+                        & (ev["time"] > t - Q.TWO_MONTHS)).sum())
+            assert out["religion_attack_counts"][i][k] == want
+
+
+def test_udf1_stateless(store, tweets):
+    _, out = run_udf(store, Q.UDF1, tweets)
+    for i in range(len(tweets["id"])):
+        want = (int(tweets["country"][i]) == Q.US_CODE
+                and Q.BOMB_HASH in tweets["text_tokens"][i])
+        assert bool(out["safety_check_flag"][i]) == want
+
+
+def test_udf2_matches_oracle(store, tweets):
+    _, out = run_udf(store, Q.UDF2, tweets)
+    sw, valid = snap(store, "sensitive_words")
+    for i in range(len(tweets["id"])):
+        c = int(tweets["country"][i])
+        toks = set(int(t) for t in tweets["text_tokens"][i] if t != 0)
+        want = any(ok and sw["country"][j] == c and int(sw["word"][j]) in toks
+                   for j, ok in enumerate(valid))
+        assert bool(out["safety_check_flag"][i]) == want
+
+
+# ---------------------------------------------------------------------------
+# §5.3 freshness semantics: the reason the paper exists
+# ---------------------------------------------------------------------------
+
+def _fresh_store():
+    s = RefStore()
+    t = s.create("religious_populations", 64,
+                 {"country": np.int32, "religion": np.int32,
+                  "population": np.int32})
+    t.upsert(np.array([0, 1], np.int64),
+             country=np.array([5, 5], np.int32),
+             religion=np.array([1, 2], np.int32),
+             population=np.array([100, 200], np.int32))
+    return s
+
+
+def _one_tweet_batch(country=5):
+    b = records.empty_batch(4)
+    b["id"][:] = np.arange(4)
+    b["country"][:] = country
+    b["valid"][:] = True
+    return b
+
+
+@pytest.mark.parametrize("model,refresh,sees_update", [
+    ("per_record", "always", True),    # Model 1: always fresh
+    ("per_batch", "always", True),     # Model 2: fresh at batch boundary
+    ("per_batch", "version", True),    # version-gated Model 2: still fresh
+    ("stream", "always", False),       # Model 3: stale (Fig 15 failure mode)
+])
+def test_freshness_semantics(model, refresh, sees_update):
+    store = _fresh_store()
+    runner = ComputingRunner(ComputingSpec(Q.Q2, 4, model, refresh), store)
+    out1 = runner.run(_one_tweet_batch())
+    assert out1["religious_population"][0] == 300
+    # mid-ingestion UPSERT (the paper's new-keyword scenario)
+    store["religious_populations"].upsert(
+        np.array([2], np.int64), country=np.array([5], np.int32),
+        religion=np.array([3], np.int32),
+        population=np.array([1000], np.int32))
+    out2 = runner.run(_one_tweet_batch())
+    want = 1300 if sees_update else 300
+    assert out2["religious_population"][0] == want
+
+
+def test_version_gated_rebuild_skips_quiet_batches():
+    """Beyond-paper: version-gated Model 2 builds state once per *version*,
+    not once per batch — but never serves stale state."""
+    store = _fresh_store()
+    runner = ComputingRunner(
+        ComputingSpec(Q.Q2, 4, "per_batch", "version"), store)
+    for _ in range(5):
+        runner.run(_one_tweet_batch())
+    assert runner.stats.state_builds == 1
+    assert runner.stats.state_reuses == 4
+    store["religious_populations"].upsert(
+        np.array([9], np.int64), country=np.array([5], np.int32),
+        religion=np.array([9], np.int32), population=np.array([7], np.int32))
+    out = runner.run(_one_tweet_batch())
+    assert runner.stats.state_builds == 2
+    assert out["religious_population"][0] == 307
+
+
+def test_paper_faithful_model2_rebuilds_every_batch():
+    store = _fresh_store()
+    runner = ComputingRunner(
+        ComputingSpec(Q.Q2, 4, "per_batch", "always"), store)
+    for _ in range(3):
+        runner.run(_one_tweet_batch())
+    assert runner.stats.state_builds == 3
+    assert runner.stats.state_reuses == 0
