@@ -20,6 +20,7 @@ from typing import Dict, List
 
 from repro.core import FeedConfig, FeedManager, RefStore, SyntheticAdapter
 from repro.core.enrich import queries as Q
+from repro.kernels import DISPATCH_MODES, set_dispatch_mode
 
 ROWS: List[Dict] = []
 
@@ -50,12 +51,29 @@ def make_manager(scale: float = 0.02, overrides=None) -> FeedManager:
     return FeedManager(store)
 
 
+def add_dispatch_arg(parser) -> None:
+    """The --dispatch axis shared by the enrichment benchmarks: route
+    operators through the Pallas kernels or the jnp reference paths (see
+    core/enrich/dispatch.py).  Off-TPU the pallas path runs in interpret
+    mode — an emulator, so absolute numbers are meaningless there; on TPU
+    it is the production path."""
+    parser.add_argument("--dispatch", choices=DISPATCH_MODES,
+                        default="auto",
+                        help="kernel dispatch mode (default: auto)")
+
+
+def set_dispatch(mode: str) -> None:
+    set_dispatch_mode(mode)
+
+
 def run_feed(mgr: FeedManager, name: str, total: int, batch: int,
              udf=None, framework: str = "new", partitions: int = 2,
-             model: str = "per_batch", refresh: str = "always"):
+             model: str = "per_batch", refresh: str = "always",
+             coalesce_rows: int = 0):
     cfg = FeedConfig(name=name, udf=udf, batch_size=batch,
                      num_partitions=partitions, framework=framework,
-                     model=model, refresh=refresh)
+                     model=model, refresh=refresh,
+                     coalesce_rows=coalesce_rows)
     h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=batch,
                                         seed=11))
     stats = h.join(timeout=1200)

@@ -11,19 +11,35 @@ Configurations, mirroring the paper's:
                     that is blind to reference changes)
   * new_gated     — beyond-paper: version-gated Model 2 (Model-3 speed when
                     reference data is quiet, Model-2 freshness always)
+
+Dispatch axis (this repo, beyond the paper): ``--dispatch
+{auto,reference,pallas}`` routes the enrichment operators through the
+Pallas kernels or the jnp reference paths (core/enrich/dispatch.py), and
+the ``hash_probe_1m`` section measures the raw equi-join probe at >= 1M
+probe rows under the selected mode — the operator-level speedup the
+framework-level numbers build on.  Off-TPU the pallas path is interpret-
+mode emulation: expect it to LOSE there; the comparison is meaningful on
+TPU hardware.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X, emit,
-                               make_manager, run_feed)
+from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
+                               add_dispatch_arg, emit, make_manager,
+                               run_feed, set_dispatch)
 from repro.core import ComputingRunner, ComputingSpec
-from repro.core.enrich import queries as Q
+from repro.core.enrich import dispatch as D
+from repro.core.enrich import ops
 from repro.core.records import SyntheticTweets, parse_json_lines
+from repro.core.refdata import KEY_SENTINEL
+from repro.core.enrich import queries as Q
 
 FIG = "fig25"
 UDFS = {"q1": Q.Q1, "q2": Q.Q2, "q3": Q.Q3, "q4": Q.Q4}
@@ -70,7 +86,48 @@ def bench_python_udf(mgr, name, total, batch):
     return total / (time.perf_counter() - t0)
 
 
-def main(total: int = 8_000) -> None:
+def bench_hash_probe(nprobe: int, nref: int = 65_536, iters: int = 5,
+                     seed: int = 17) -> float:
+    """Raw sorted-join probe throughput (rows/s) under the active dispatch
+    mode: the operator the paper's hash-join UDFs (Q1/Q5/Q6) bottleneck on.
+    The probe batch is bucket-padded by the dispatch layer exactly as feed
+    batches are, so this measures the production code path."""
+    rng = np.random.default_rng(seed)
+    keys = np.full((nref + 1024,), KEY_SENTINEL, np.int64)
+    keys[:nref] = np.sort(rng.choice(nref * 4, nref, replace=False))
+    ref_keys = jnp.asarray(keys)
+    probe = jnp.asarray(rng.integers(0, nref * 4, nprobe).astype(np.int64))
+    jitted = jax.jit(ops.sorted_join)
+    out = jitted(probe, ref_keys)          # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(probe, ref_keys)
+    jax.block_until_ready(out)
+    return nprobe * iters / (time.perf_counter() - t0)
+
+
+def main(total: int = 8_000, dispatch: str = "auto",
+         probe_rows: int = 1_000_000) -> None:
+    set_dispatch(dispatch)
+    tag = f"[dispatch={dispatch}]"
+
+    # off-TPU the pallas path is interpret-mode emulation (~1000x slower):
+    # cap the microbench so --dispatch pallas still completes end-to-end;
+    # the row count is in the emitted name, so runs stay comparable
+    if dispatch == "pallas" and jax.default_backend() != "tpu":
+        capped = min(probe_rows, 32_768)
+        if capped != probe_rows:
+            emit(FIG, "hash_probe_note", capped, "rows",
+                 f"{tag} interpret-mode emulation off-TPU: probe rows "
+                 f"capped from {probe_rows}")
+        probe_rows = capped
+
+    rps = bench_hash_probe(probe_rows)
+    emit(FIG, f"hash_probe_{probe_rows}", rps, "rows/s",
+         f"{tag} sorted-join probe, nref=65536, "
+         f"buckets={sorted(set(b for _, b in D.bucket_stats()))}")
+
     mgr = make_manager(scale=0.02)
     batches = (("1X", BATCH_1X), ("4X", BATCH_4X), ("16X", BATCH_16X))
 
@@ -90,6 +147,14 @@ def main(total: int = 8_000) -> None:
                      framework="new", partitions=2, refresh="version")
         emit(FIG, f"{qname}_gated_1X", s.records_per_s, "rec/s",
              f"state_builds={s.computing.state_builds} (vs per-batch)")
+        # beyond-paper: worker micro-batching (coalesce backlog into one
+        # kernel dispatch, bucket-padded — see core/feed.py)
+        s = run_feed(mgr, f"f25-{qname}-coal", total, BATCH_1X, udf=udf,
+                     framework="new", partitions=2,
+                     coalesce_rows=BATCH_16X)
+        emit(FIG, f"{qname}_coalesced_1X", s.records_per_s, "rec/s",
+             f"coalesced_frames={s.coalesced_frames} "
+             f"invocations={s.computing.invocations}")
 
     for qname in PY_UDFS:
         for blabel, batch in (("1X", BATCH_1X), ("16X", BATCH_16X)):
@@ -99,4 +164,11 @@ def main(total: int = 8_000) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_dispatch_arg(ap)
+    ap.add_argument("--total", type=int, default=8_000)
+    ap.add_argument("--probe-rows", type=int, default=1_000_000,
+                    help="hash-probe microbench probe rows (>= 1M for the "
+                         "paper-scale measurement)")
+    args = ap.parse_args()
+    main(args.total, args.dispatch, args.probe_rows)

@@ -16,10 +16,12 @@ speed up poorly and degrade with small batches; complex spatial UDFs
 
 from __future__ import annotations
 
+import argparse
 import time
 
-from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X, emit,
-                               make_manager)
+from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
+                               add_dispatch_arg, emit, make_manager,
+                               set_dispatch)
 from repro.core import ComputingRunner, ComputingSpec
 from repro.core.enrich import queries as Q
 from repro.core.records import SyntheticTweets, parse_json_lines
@@ -67,7 +69,8 @@ def derived_time(t_compute, c_inv, inv, nodes):
     return t_compute / nodes + inv * c_inv * (1 + 0.1 * (nodes - 1))
 
 
-def main(total: int = 3_000) -> None:
+def main(total: int = 3_000, dispatch: str = "auto") -> None:
+    set_dispatch(dispatch)
     mgr = make_manager(scale=0.02)
     for qname, udf in UDFS.items():
         for blabel, batch in (("1X", BATCH_1X), ("4X", BATCH_4X),
@@ -76,9 +79,14 @@ def main(total: int = 3_000) -> None:
             t6 = derived_time(t_c, c_inv, inv, 6)
             t24 = derived_time(t_c, c_inv, inv, 24)
             emit(FIG, f"{qname}_{blabel}_speedup_24v6", t6 / t24, "x",
-                 f"wall={wall:.2f}s compute={t_c:.2f}s "
+                 f"[dispatch={dispatch}] wall={wall:.2f}s "
+                 f"compute={t_c:.2f}s "
                  f"c_inv={c_inv*1e3:.2f}ms inv={inv} (derived model)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_dispatch_arg(ap)
+    ap.add_argument("--total", type=int, default=3_000)
+    args = ap.parse_args()
+    main(args.total, args.dispatch)

@@ -29,14 +29,17 @@ def main() -> int:
                     help="run a single figure (fig24..fig29, roofline)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale record counts (slow on 1 core)")
+    common.add_dispatch_arg(ap)
     args = ap.parse_args()
+    common.set_dispatch(args.dispatch)
 
     k = 5 if args.full else 1
     figs = {
         "fig24": lambda: f24.main(total=20_000 * k),
-        "fig25": lambda: f25.main(total=8_000 * k),
+        "fig25": lambda: f25.main(total=8_000 * k, dispatch=args.dispatch),
         "fig26": lambda: f26.main(total=4_000 * k),
-        "fig28": lambda: f28.main(total=3_000 * k),
+        "fig28": lambda: f28.main(total=3_000 * k,
+                                  dispatch=args.dispatch),
         "fig29": lambda: f29.main(base_total=2_000 * k),
         "roofline": froof.main,
     }

@@ -134,13 +134,24 @@ class ComputingRunner:
     # ----------------------------------------------------------------- parse
     def parse(self, frame) -> Dict[str, np.ndarray]:
         """Raw JSON-lines frame -> padded tensor records (a no-op for frames
-        that arrive pre-parsed from a balanced intake)."""
+        that arrive pre-parsed from a balanced intake).  Coalesced
+        micro-batches exceeding the configured batch size are padded up to a
+        power-of-two row bucket so the predeployed executables see a bounded
+        set of shapes instead of one compile per coalesced size."""
         t0 = time.perf_counter()
         if isinstance(frame, dict):
             batch = frame
         else:
             batch = records.parse_json_lines(frame)
-        batch = records.pad_batch(batch, self.spec.batch_size)
+        size = self.spec.batch_size
+        n = records.batch_rows(batch)
+        if n > size and self.spec.model != "per_record":
+            # per_record keeps pad_batch's loud oversize assert: its row
+            # loop walks exactly batch_size rows, so a bucketed batch
+            # would silently drop the tail
+            from repro.core.enrich import dispatch
+            size = dispatch.bucket_rows(n, minimum=size)
+        batch = records.pad_batch(batch, size)
         self.stats.parse_s += time.perf_counter() - t0
         return batch
 

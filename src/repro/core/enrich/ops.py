@@ -14,6 +14,13 @@ shapes).  These are the building blocks of the paper's UDF workload:
 
 Invalid reference rows are key-sentinel padded, so every operator is correct
 on fixed-capacity snapshots regardless of fill level.
+
+Routing: the hot-path operators (``sorted_join``, ``radius_count``,
+``radius_topk``, ``segment_sum``, ``segment_count``, ``segment_topk``) are
+thin wrappers over the kernel-dispatch layer (dispatch.py), which picks the
+Pallas kernel or the ``_*_ref`` jnp bodies kept here.  The ``_*_ref``
+functions ARE the former implementations — dispatch falls back to them for
+tiny batches, CPU-only runs, or mode="reference".
 """
 
 from __future__ import annotations
@@ -38,11 +45,17 @@ _SPATIAL_CHUNK = 512   # probe-row block for distance tiles (see kernels/)
 def sorted_join(probe: Array, ref_keys: Array) -> Tuple[Array, Array]:
     """Equi-join probe: for each probe key, the index of its match in the
     (ascending, sentinel-padded) reference key column and a found flag.
-    probe: (B,) int64; ref_keys: (R,) int64 sorted.  Returns (idx, found)."""
+    probe: (B,) int64; ref_keys: (R,) int64 sorted.
+    Returns (idx (B,) int32 [-1 when absent], found (B,) bool)."""
+    from repro.core.enrich import dispatch
+    return dispatch.sorted_join(probe, ref_keys)
+
+
+def _sorted_join_ref(probe: Array, ref_keys: Array) -> Tuple[Array, Array]:
     idx = jnp.searchsorted(ref_keys, probe)
     idx = jnp.minimum(idx, ref_keys.shape[0] - 1)
     found = (ref_keys[idx] == probe) & (probe != KEY_SENTINEL)
-    return idx.astype(jnp.int32), found
+    return jnp.where(found, idx, -1).astype(jnp.int32), found
 
 
 def gather_col(col: Array, idx: Array, found: Array, fill=0) -> Array:
@@ -59,6 +72,12 @@ def gather_col(col: Array, idx: Array, found: Array, fill=0) -> Array:
 
 def segment_sum(values: Array, seg: Array, num_segments: int,
                 valid: Optional[Array] = None) -> Array:
+    from repro.core.enrich import dispatch
+    return dispatch.segment_sum(values, seg, num_segments, valid)
+
+
+def _segment_sum_ref(values: Array, seg: Array, num_segments: int,
+                     valid: Optional[Array] = None) -> Array:
     if valid is not None:
         values = jnp.where(valid, values, 0)
     return jax.ops.segment_sum(values, seg, num_segments=num_segments)
@@ -66,13 +85,21 @@ def segment_sum(values: Array, seg: Array, num_segments: int,
 
 def segment_count(seg: Array, num_segments: int,
                   valid: Optional[Array] = None) -> Array:
-    ones = jnp.ones(seg.shape, jnp.int32)
-    return segment_sum(ones, seg, num_segments, valid)
+    from repro.core.enrich import dispatch
+    return dispatch.segment_count(seg, num_segments, valid)
 
 
 def segment_topk(values: Array, seg: Array, payload: Array,
                  num_segments: int, k: int,
                  valid: Optional[Array] = None) -> Tuple[Array, Array]:
+    from repro.core.enrich import dispatch
+    return dispatch.segment_topk(values, seg, payload, num_segments, k,
+                                 valid)
+
+
+def _segment_topk_ref(values: Array, seg: Array, payload: Array,
+                      num_segments: int, k: int,
+                      valid: Optional[Array] = None) -> Tuple[Array, Array]:
     """Per-segment top-k by ``values`` (descending), returning the payload.
 
     One composite-key argsort — O(R log R), never materializes (S, R).
@@ -180,6 +207,14 @@ def radius_count(points: Array, refs: Array, radius: float,
                  ref_valid: Optional[Array] = None,
                  chunk: int = _SPATIAL_CHUNK) -> Array:
     """#reference points within ``radius`` of each probe point. (B,) int32."""
+    from repro.core.enrich import dispatch
+    return dispatch.radius_count(points, refs, radius, ref_valid,
+                                 chunk=chunk)
+
+
+def _radius_count_ref(points: Array, refs: Array, radius: float,
+                      ref_valid: Optional[Array] = None,
+                      chunk: int = _SPATIAL_CHUNK) -> Array:
     r2 = jnp.float32(radius) ** 2
 
     def one(pts):
@@ -198,6 +233,15 @@ def radius_topk(points: Array, refs: Array, radius: float, k: int,
                 ) -> Tuple[Array, Array, Array]:
     """k nearest reference points within ``radius``.
     Returns (idx (B,k) int32 [-1 when absent], dist2 (B,k), count (B,))."""
+    from repro.core.enrich import dispatch
+    return dispatch.radius_topk(points, refs, radius, k, ref_valid,
+                                chunk=chunk)
+
+
+def _radius_topk_ref(points: Array, refs: Array, radius: float, k: int,
+                     ref_valid: Optional[Array] = None,
+                     chunk: int = _SPATIAL_CHUNK
+                     ) -> Tuple[Array, Array, Array]:
     r2 = jnp.float32(radius) ** 2
     kk = min(k, refs.shape[0])
 

@@ -25,6 +25,16 @@ frames are re-enqueued (at-least-once) and the idempotent storage job makes
 delivery effectively exactly-once.  Idle workers steal from the deepest
 holder (straggler mitigation).  ``FeedHandle.scale_up`` adds computing
 partitions mid-feed (elasticity — the round-robin partitioner re-targets).
+
+Cross-partition micro-batching (``coalesce_rows`` > 0): when a worker finds
+a backlog in its holder it coalesces queued frames — up to a row AND byte
+budget — into ONE kernel dispatch.  Per-invocation overhead (snapshot
+lookup, H2D, executable dispatch) is paid once per coalesced batch instead
+of once per frame, which is the paper's batch-size lever (Fig 25/26)
+applied adaptively: an idle feed keeps per-frame latency, a backlogged feed
+converges to throughput-optimal batches.  Coalesced batches are padded to
+power-of-two row buckets (enrich/dispatch.py) so they never trigger
+per-size recompiles.
 """
 
 from __future__ import annotations
@@ -51,6 +61,18 @@ from repro.core.refdata import RefStore
 from repro.core.storage import StorageJob
 
 
+def _frame_rows(frame) -> int:
+    if isinstance(frame, dict):
+        return records.batch_rows(frame)
+    return len(frame)
+
+
+def _frame_bytes(frame) -> int:
+    if isinstance(frame, dict):
+        return sum(v.nbytes for v in frame.values())
+    return sum(len(line) for line in frame)
+
+
 @dataclasses.dataclass
 class FeedConfig:
     name: str = "feed"
@@ -67,6 +89,12 @@ class FeedConfig:
     max_retries: int = 3
     retry_backoff_s: float = 0.05
     holder_capacity: int = 8
+    # cross-partition micro-batching: coalesce queued frames into one
+    # computing-job invocation up to this many rows (0 disables) and
+    # coalesce_bytes raw bytes.  Ignored for model="per_record", whose
+    # semantics are inherently per-row.
+    coalesce_rows: int = 0
+    coalesce_bytes: int = 8 << 20
     # test hook: raises inside the computing job when it returns True
     fault_hook: Optional[Callable[[int], bool]] = None
     # alternate sink: enriched batches go to this callable instead of the
@@ -83,6 +111,7 @@ class FeedStats:
     stored: int = 0
     retries: int = 0
     steals: int = 0
+    coalesced_frames: int = 0     # frames merged into a neighbor's batch
     computing: ComputingStats = dataclasses.field(
         default_factory=ComputingStats)
     predeploy: Dict = dataclasses.field(default_factory=dict)
@@ -175,6 +204,34 @@ class FeedHandle:
         w.start()
 
     # --------------------------------------------------------------- workers
+    def _coalesce(self, holder: PartitionHolder, frame):
+        """Merge backlogged frames (same representation only) into one
+        computing batch, bounded by the row/byte budgets."""
+        cfg = self.cfg
+        if cfg.coalesce_rows <= 0 or cfg.model == "per_record":
+            return frame
+        kind = dict if isinstance(frame, dict) else list
+        group = [frame]
+        rows = _frame_rows(frame)
+        nbytes = _frame_bytes(frame)
+        while rows < cfg.coalesce_rows and nbytes < cfg.coalesce_bytes:
+            extra = holder.pull_nowait(lambda f: isinstance(f, kind))
+            if extra is None:
+                break
+            group.append(extra)
+            rows += _frame_rows(extra)
+            nbytes += _frame_bytes(extra)
+        if len(group) == 1:
+            return frame
+        with self._lock:
+            self.stats.coalesced_frames += len(group) - 1
+        if kind is dict:
+            return records.concat_batches(group)
+        merged: List = []
+        for g in group:
+            merged.extend(g)
+        return merged
+
     def _run_with_retry(self, runner: ComputingRunner, frame) -> Dict:
         attempt = 0
         while True:
@@ -214,6 +271,7 @@ class FeedHandle:
                     frame = stolen
                     with self._lock:
                         self.stats.steals += 1
+                frame = self._coalesce(holder, frame)
                 t0 = time.perf_counter()
                 out = self._run_with_retry(runner, frame)
                 holder.record_service(time.perf_counter() - t0)

@@ -94,6 +94,22 @@ class PartitionHolder:
             self._not_full.notify()
             return frame
 
+    def pull_nowait(self, predicate: Optional[Callable[[Any], bool]] = None
+                    ) -> Optional[Any]:
+        """Non-blocking pull from the head; returns None when the queue is
+        empty, the head is the StopRecord (left in place so the drain
+        protocol is untouched), or ``predicate`` rejects the head frame.
+        Used by the worker micro-batcher to coalesce backlogged frames."""
+        with self._lock:
+            if not self._q or isinstance(self._q[0], StopRecord):
+                return None
+            if predicate is not None and not predicate(self._q[0]):
+                return None
+            frame = self._q.popleft()
+            self.pulled += 1
+            self._not_full.notify()
+            return frame
+
     def steal(self) -> Optional[Any]:
         """Non-blocking take from the *tail* (most recently queued) — used by
         idle workers for straggler mitigation; never steals the StopRecord."""

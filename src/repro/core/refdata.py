@@ -51,7 +51,17 @@ class RefSnapshot:
 
 class RefTable:
     """Fixed-capacity upsertable table. Thread-safe; snapshot() is O(1) when
-    unchanged and O(n log n) (re-sort) after writes."""
+    unchanged and O(n log n) (re-sort) after writes.
+
+    Snapshot builds are **double-buffered**: after a write invalidates the
+    cached snapshot, the next snapshot() copies the raw columns under the
+    lock (O(n) memcpy) and sorts OUTSIDE it into a fresh buffer, so an
+    UPSERT/DELETE arriving mid-build never waits behind the O(n log n) sort
+    and computing workers never stall a writer — the paper's adaptiveness
+    requirement (reference changes visible *during* ingestion, §5.3).  A
+    build raced by a write simply isn't cached: it still returns a
+    consistent view as of its copy point (exactly Model-2 "state as of
+    batch pickup"), and the next call rebuilds against the newer version."""
 
     def __init__(self, name: str, capacity: int,
                  schema: Dict[str, np.dtype]):
@@ -59,6 +69,7 @@ class RefTable:
         self.capacity = int(capacity)
         self.schema = {k: np.dtype(v) for k, v in schema.items()}
         self._lock = threading.Lock()
+        self._build_lock = threading.Lock()   # readers only; never writers
         self._version = 0
         self._size = 0
         self._key = np.full((capacity,), KEY_SENTINEL, np.int64)
@@ -117,16 +128,31 @@ class RefTable:
     # ------------------------------------------------------------- snapshot
     def snapshot(self) -> RefSnapshot:
         """Sorted-by-key immutable view; cached until the next write."""
-        with self._lock:
-            if self._snapshot is not None:
-                return self._snapshot
-            order = np.argsort(self._key, kind="stable")
-            arrays = {"key": np.ascontiguousarray(self._key[order])}
-            for c, arr in self._cols.items():
+        snap = self._snapshot          # atomic ref read (GIL)
+        if snap is not None:
+            return snap
+        # one builder at a time: concurrent readers wait for the winner's
+        # result instead of each paying the O(n log n) sort.  Writers never
+        # take this lock, so upserts proceed while the build runs.
+        with self._build_lock:
+            # buffer 1: consistent raw copy under the write lock (memcpy)
+            with self._lock:
+                if self._snapshot is not None:
+                    return self._snapshot
+                version, size = self._version, self._size
+                key = self._key.copy()
+                cols = {c: arr.copy() for c, arr in self._cols.items()}
+            # buffer 2: sort outside the write lock — writers proceed
+            order = np.argsort(key, kind="stable")
+            arrays = {"key": np.ascontiguousarray(key[order])}
+            for c, arr in cols.items():
                 arrays[c] = np.ascontiguousarray(arr[order])
-            self._snapshot = RefSnapshot(
-                self.name, self._version, self._size, arrays)
-            return self._snapshot
+            snap = RefSnapshot(self.name, version, size, arrays)
+            with self._lock:
+                # publish only if no write raced the build
+                if self._version == version and self._snapshot is None:
+                    self._snapshot = snap
+        return snap
 
     @property
     def version(self) -> int:

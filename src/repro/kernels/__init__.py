@@ -1,3 +1,87 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel registry + the global kernel-dispatch policy.
+
+Kernels live in subpackages (<name>/kernel.py + ops.py + ref.py); add one
+ONLY for compute hot-spots the paper itself optimizes.  This module owns the
+*policy* every ops.py wrapper consults when its ``use_pallas`` argument is
+left as None:
+
+  mode "auto"       Pallas on TPU, reference elsewhere (the default: CPU
+                    interpret-mode Pallas is an emulator, orders of
+                    magnitude slower than the jnp reference paths)
+  mode "pallas"     always the Pallas kernel (interpret mode off-TPU) —
+                    what the equivalence tests and --dispatch pallas
+                    benchmarks force
+  mode "reference"  always the pure-jnp oracle
+
+The initial mode comes from ``REPRO_KERNEL_DISPATCH`` so subprocess runs
+(benchmarks, dry-runs) inherit the choice without plumbing.  The
+higher-level enrichment router (core/enrich/dispatch.py) layers batch-size
+thresholds and shape bucketing on top of this backend policy.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+
+import jax
+
+DISPATCH_MODES = ("auto", "pallas", "reference")
+
+# process-global (NOT thread-local): feed computing workers are threads and
+# must see the mode the driver set
+_policy_lock = threading.Lock()
+_policy_mode: str | None = None
+
+
+def _default_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_DISPATCH", "auto")
+    return mode if mode in DISPATCH_MODES else "auto"
+
+
+def get_dispatch_mode() -> str:
+    with _policy_lock:
+        return _policy_mode or _default_mode()
+
+
+def set_dispatch_mode(mode: str) -> None:
+    global _policy_mode
+    if mode not in DISPATCH_MODES:
+        raise ValueError(f"dispatch mode {mode!r} not in {DISPATCH_MODES}")
+    with _policy_lock:
+        _policy_mode = mode
+
+
+@contextlib.contextmanager
+def dispatch_mode(mode: str):
+    """Scoped override, e.g. ``with dispatch_mode("pallas"): ...``.
+    Process-wide, like set_dispatch_mode."""
+    global _policy_mode
+    with _policy_lock:
+        prev = _policy_mode
+    set_dispatch_mode(mode)
+    try:
+        yield
+    finally:
+        with _policy_lock:
+            _policy_mode = prev
+
+
+def resolve_use_pallas(use_pallas: bool | None) -> bool:
+    """Resolve an ops.py wrapper's ``use_pallas=None`` against the policy."""
+    if use_pallas is not None:
+        return use_pallas
+    mode = get_dispatch_mode()
+    if mode == "pallas":
+        return True
+    if mode == "reference":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Off-TPU there is no Mosaic backend: run kernels interpreted."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

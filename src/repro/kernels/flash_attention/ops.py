@@ -4,15 +4,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import auto_interpret, resolve_use_pallas
 from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    causal: bool = True, use_pallas: bool = True,
+                    causal: bool = True, use_pallas: bool | None = None,
                     interpret: bool | None = None) -> jax.Array:
-    if not use_pallas:
+    """``use_pallas=None`` defers to the global dispatch policy
+    (repro.kernels.get_dispatch_mode)."""
+    if not resolve_use_pallas(use_pallas):
         return ref.flash_attention(q, k, v, causal)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return flash_attention_pallas(q, k, v, causal, interpret=interpret)
+    return flash_attention_pallas(q, k, v, causal,
+                                  interpret=auto_interpret(interpret))

@@ -4,14 +4,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import auto_interpret, resolve_use_pallas
 from repro.kernels.hash_probe import ref
 from repro.kernels.hash_probe.kernel import sorted_probe_pallas
 
 
 def sorted_probe(probe: jax.Array, ref_keys: jax.Array,
-                 use_pallas: bool = True, interpret: bool | None = None):
-    if not use_pallas:
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+    """``use_pallas=None`` defers to the global dispatch policy
+    (repro.kernels.get_dispatch_mode)."""
+    if not resolve_use_pallas(use_pallas):
         return ref.sorted_probe(probe, ref_keys)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return sorted_probe_pallas(probe, ref_keys, interpret=interpret)
+    return sorted_probe_pallas(probe, ref_keys,
+                               interpret=auto_interpret(interpret))

@@ -5,22 +5,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import auto_interpret, resolve_use_pallas
 from repro.kernels.segment_reduce import ref
 from repro.kernels.segment_reduce.kernel import segment_sum_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def segment_sum(values: jax.Array, seg: jax.Array, num_segments: int,
-                use_pallas: bool = True, interpret: bool | None = None
-                ) -> jax.Array:
-    """Drop-in ``segment_sum``; ``interpret=None`` auto-selects interpret
-    mode off-TPU so the same call sites run everywhere."""
-    if not use_pallas:
+                use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """Drop-in ``segment_sum``; ``use_pallas=None`` defers to the global
+    dispatch policy, ``interpret=None`` auto-selects interpret mode off-TPU
+    so the same call sites run everywhere."""
+    if not resolve_use_pallas(use_pallas):
         return ref.segment_sum(values, seg, num_segments)
-    if interpret is None:
-        interpret = not _on_tpu()
     return segment_sum_pallas(values, seg, num_segments,
-                              interpret=interpret)
+                              interpret=auto_interpret(interpret))

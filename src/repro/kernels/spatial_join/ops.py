@@ -4,16 +4,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import auto_interpret, resolve_use_pallas
 from repro.kernels.spatial_join import ref
 from repro.kernels.spatial_join.kernel import radius_join_pallas
 
 
 def radius_join(px: jax.Array, py: jax.Array, rx: jax.Array, ry: jax.Array,
                 radius: float, k: int, ref_valid: jax.Array | None = None,
-                use_pallas: bool = True, interpret: bool | None = None):
-    if not use_pallas:
+                use_pallas: bool | None = None,
+                interpret: bool | None = None):
+    """``use_pallas=None`` defers to the global dispatch policy
+    (repro.kernels.get_dispatch_mode)."""
+    if not resolve_use_pallas(use_pallas):
         return ref.radius_join(px, py, rx, ry, radius, k, ref_valid)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     return radius_join_pallas(px, py, rx, ry, radius, k, ref_valid,
-                              interpret=interpret)
+                              interpret=auto_interpret(interpret))

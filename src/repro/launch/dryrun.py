@@ -142,7 +142,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                      recorded_fallbacks()]
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = HC.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     if verbose:
         print(f"[{arch} x {shape_name} x {mesh_name}] "

@@ -24,11 +24,12 @@ routing math (top-k, normalized weights, load-balance aux) is shared.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -36,6 +37,12 @@ from repro.models import moe as M
 from repro.models.sharding import current_mesh
 
 Array = jax.Array
+
+# jax renamed shard_map's replication-check kwarg check_rep -> check_vma
+_CHECK_KWARG = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False})
 
 
 def _round_up(x: int, m: int) -> int:
@@ -84,7 +91,7 @@ def moe_ffn_ep(cfg: ModelConfig, p: Dict, x: Array,
                   P(axis), P(axis), P(axis)),       # experts sharded on E
         out_specs=(P(batch_axes if batch_axes else None, None, None),
                    P()),
-        check_vma=False)
+        **_CHECK_KWARG)
     y, aux = fn(x, p["router"], p["w_gate"].astype(x.dtype),
                 p["w_up"].astype(x.dtype), p["w_down"].astype(x.dtype))
     return y, aux

@@ -1,0 +1,308 @@
+"""Kernel-dispatch layer (core/enrich/dispatch.py): Pallas-path results must
+match the kernels/*/ref.py oracles on randomized shapes — including the
+bucket-padding edge cases (empty batch, batch == bucket boundary, keys
+absent from the reference table) — plus the worker micro-batcher and the
+double-buffered reference snapshots that ride on it.
+
+No hypothesis dependency: this module must run on minimal installs."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FeedConfig, FeedManager, PartitionHolder, RefStore
+from repro.core.computing import ComputingRunner, ComputingSpec
+from repro.core.enrich import dispatch, ops
+from repro.core.enrich import queries as Q
+from repro.core.feed import FeedHandle
+from repro.core.intake import SyntheticAdapter
+from repro.core.records import SyntheticTweets, parse_json_lines
+from repro.core.refdata import KEY_SENTINEL, RefTable
+from repro.kernels import dispatch_mode
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.hash_probe import ref as hp_ref
+from repro.kernels.segment_reduce import ref as sr_ref
+from repro.kernels.spatial_join import ref as sj_ref
+
+
+def _sorted_keys(rng, nref, capacity):
+    out = np.full((capacity,), KEY_SENTINEL, np.int64)
+    out[:nref] = np.sort(rng.choice(100_000, nref, replace=False))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# equivalence: dispatch pallas path vs the kernel reference oracles
+# ---------------------------------------------------------------------------
+
+# edge cases by construction: 0 = empty batch; 512 = exactly one bucket;
+# 513 = one past the bucket boundary; 777 = interior; 2048 = larger bucket
+@pytest.mark.parametrize("nprobe", [0, 1, 512, 513, 777, 2048])
+def test_sorted_join_pallas_matches_ref(nprobe):
+    rng = np.random.default_rng(nprobe + 1)
+    keys = jnp.asarray(_sorted_keys(rng, 700, 1000))
+    # half the probes are absent from the table; one is the sentinel
+    probe = rng.integers(0, 200_000, max(nprobe, 1)).astype(np.int64)[:nprobe]
+    if nprobe > 1:
+        probe[0] = KEY_SENTINEL
+    probe = jnp.asarray(probe)
+    want_idx, want_found = hp_ref.sorted_probe(probe, keys)
+    with dispatch_mode("pallas"):
+        got_idx, got_found = dispatch.sorted_join(probe, keys)
+    np.testing.assert_array_equal(np.asarray(got_found),
+                                  np.asarray(want_found))
+    np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(want_idx))
+
+
+def test_sorted_join_all_keys_absent():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(_sorted_keys(rng, 100, 256))
+    probe = jnp.asarray(rng.integers(200_000, 300_000, 600).astype(np.int64))
+    with dispatch_mode("pallas"):
+        idx, found = dispatch.sorted_join(probe, keys)
+    assert not np.asarray(found).any()
+    assert (np.asarray(idx) == -1).all()
+
+
+@pytest.mark.parametrize("nprobe,k", [(0, 3), (256, 1), (300, 4), (512, 8)])
+def test_radius_topk_pallas_matches_ref(nprobe, k):
+    rng = np.random.default_rng(nprobe + k)
+    pts = jnp.asarray(rng.uniform(-10, 10, (nprobe, 2)).astype(np.float32))
+    refs = jnp.asarray(rng.uniform(-10, 10, (200, 2)).astype(np.float32))
+    valid = jnp.asarray(rng.random(200) < 0.9)
+    want = sj_ref.radius_join(pts[:, 0], pts[:, 1], refs[:, 0], refs[:, 1],
+                              2.5, k, valid)
+    with dispatch_mode("pallas"):
+        got = dispatch.radius_topk(pts, refs, 2.5, k, valid)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_radius_count_pallas_matches_ref():
+    rng = np.random.default_rng(11)
+    pts = jnp.asarray(rng.uniform(-5, 5, (700, 2)).astype(np.float32))
+    refs = jnp.asarray(rng.uniform(-5, 5, (300, 2)).astype(np.float32))
+    _, _, want = sj_ref.radius_join(pts[:, 0], pts[:, 1],
+                                    refs[:, 0], refs[:, 1], 1.5, 1, None)
+    with dispatch_mode("pallas"):
+        got = dispatch.radius_count(pts, refs, 1.5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("r,s", [(0, 4), (512, 33), (700, 129)])
+def test_segment_sum_pallas_matches_ref(dtype, r, s):
+    rng = np.random.default_rng(r + s)
+    vals = jnp.asarray(rng.integers(0, 100, r).astype(dtype))
+    seg = jnp.asarray(rng.integers(0, s, r).astype(np.int32))
+    valid = jnp.asarray(rng.random(r) < 0.8)
+    want = sr_ref.segment_sum(jnp.where(valid, vals, 0), seg, s)
+    with dispatch_mode("pallas"):
+        got = dispatch.segment_sum(vals, seg, s, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    with dispatch_mode("pallas"):
+        cnt = dispatch.segment_count(seg, s, valid)
+    want_cnt = sr_ref.segment_sum(
+        jnp.where(valid, 1, 0).astype(jnp.int32), seg, s)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(want_cnt))
+
+
+def test_segment_sum_int64_falls_back_to_reference():
+    """The MXU/VPU kernel accumulates in 32 bits: int64 inputs must take the
+    XLA path and keep exact 64-bit sums."""
+    vals = jnp.asarray(np.array([2**40, 2**40, 7], np.int64))
+    seg = jnp.asarray(np.array([0, 0, 1], np.int32))
+    dispatch.reset_bucket_stats()
+    with dispatch_mode("pallas"):
+        got = dispatch.segment_sum(vals, seg, 2)
+    np.testing.assert_array_equal(np.asarray(got), [2**41, 7])
+    assert not any(op == "segment_sum" for op, _ in dispatch.bucket_stats())
+
+
+def test_segment_topk_dispatch_matches_ops_ref():
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.integers(0, 1000, 300).astype(np.int32))
+    seg = jnp.asarray(rng.integers(0, 12, 300).astype(np.int32))
+    pay = jnp.asarray(np.arange(300, dtype=np.int32))
+    want = ops._segment_topk_ref(vals, seg, pay, 12, 3)
+    with dispatch_mode("pallas"):
+        got = dispatch.segment_topk(vals, seg, pay, 12, 3)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_flash_attention_policy_routes_to_pallas():
+    """The fourth kernel wrapper honors the same global policy."""
+    rng = np.random.default_rng(9)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 128, 4, 64))
+                           .astype(np.float32)) for _ in range(3))
+    want = fa_ref.flash_attention(q, k, v, causal=True)
+    with dispatch_mode("pallas"):
+        got = fa_ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# shape bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_rows_power_of_two():
+    assert dispatch.bucket_rows(1) == dispatch._config.bucket_min
+    assert dispatch.bucket_rows(600) == 1024
+    assert dispatch.bucket_rows(1024) == 1024
+    assert dispatch.bucket_rows(1025) == 2048
+    assert dispatch.bucket_rows(800, minimum=420) == 840  # 420 * 2^k ladder
+    assert dispatch.bucket_rows(900, minimum=420) == 1680
+
+
+def test_nearby_sizes_share_a_compiled_bucket():
+    rng = np.random.default_rng(17)
+    keys = jnp.asarray(_sorted_keys(rng, 500, 1000))
+    dispatch.reset_bucket_stats()
+    with dispatch_mode("pallas"):
+        for b in (600, 900, 1024):   # all pad to the 1024 bucket
+            dispatch.sorted_join(
+                jnp.asarray(rng.integers(0, 1000, b).astype(np.int64)), keys)
+        dispatch.sorted_join(
+            jnp.asarray(rng.integers(0, 1000, 1025).astype(np.int64)), keys)
+    stats = dispatch.bucket_stats()
+    assert stats[("sorted_join", 1024)] == 3
+    assert stats[("sorted_join", 2048)] == 1
+
+
+# ---------------------------------------------------------------------------
+# worker micro-batching (cross-partition coalescing)
+# ---------------------------------------------------------------------------
+
+def _handle(coalesce_rows, model="per_batch"):
+    cfg = FeedConfig(name="t", batch_size=50, coalesce_rows=coalesce_rows,
+                     model=model)
+    return FeedHandle(cfg, FeedManager(RefStore()),
+                      SyntheticAdapter(total=0, frame_size=50))
+
+
+def test_coalesce_merges_backlog_up_to_row_budget():
+    src = SyntheticTweets(seed=3)
+    frames = list(src.batches(250, 50))            # 5 frames x 50 rows
+    holder = PartitionHolder(("t:intake", 0), capacity=8)
+    for f in frames[1:]:
+        holder.push(f)
+    h = _handle(coalesce_rows=170)
+    merged = h._coalesce(holder, frames[0])
+    # 50 + 50 + 50 + 50 crosses the 170-row budget at 200; 5th frame stays
+    assert len(merged) == 200
+    assert holder.depth == 1
+    assert h.stats.coalesced_frames == 3
+    assert merged[:50] == frames[0]                # order preserved
+
+
+def test_coalesce_disabled_and_per_record_passthrough():
+    src = SyntheticTweets(seed=3)
+    frames = list(src.batches(100, 50))
+    for kwargs in ({"coalesce_rows": 0},
+                   {"coalesce_rows": 500, "model": "per_record"}):
+        holder = PartitionHolder(("t:intake", 0), capacity=8)
+        holder.push(frames[1])
+        h = _handle(**kwargs)
+        assert h._coalesce(holder, frames[0]) is frames[0]
+        assert holder.depth == 1
+
+
+def test_coalesce_never_crosses_stop_record():
+    src = SyntheticTweets(seed=3)
+    frames = list(src.batches(100, 50))
+    holder = PartitionHolder(("t:intake", 0), capacity=8)
+    holder.close()                                  # StopRecord at the head
+    h = _handle(coalesce_rows=1000)
+    assert h._coalesce(holder, frames[0]) is frames[0]
+
+
+def test_runner_bucket_pads_oversized_coalesced_batch():
+    """A coalesced frame bigger than the compiled batch size pads to the
+    batch_size * 2^k ladder instead of compiling per exact size."""
+    store = RefStore()
+    Q.make_reference_tables(store, scale=0.002, seed=7)
+    runner = ComputingRunner(ComputingSpec(Q.Q1, 420), store)
+    src = SyntheticTweets(seed=5)
+    frame = next(iter(src.batches(600, 600)))       # 600 rows > 420
+    out = runner.run(frame)
+    assert out["id"].shape[0] == 840                # 420 * 2
+    assert int(out["valid"].sum()) == 600
+
+
+def test_feed_end_to_end_with_coalescing_stores_every_record():
+    store = RefStore()
+    Q.make_reference_tables(store, scale=0.002, seed=7)
+    mgr = FeedManager(store)
+    cfg = FeedConfig(name="coal", udf=Q.Q1, batch_size=50,
+                     num_partitions=2, coalesce_rows=400)
+    h = mgr.start(cfg, SyntheticAdapter(total=1000, frame_size=50, seed=11))
+    stats = h.join(timeout=300)
+    assert stats.stored == 1000
+    # invocations can only shrink under coalescing, never grow
+    assert stats.computing.invocations <= stats.frames_in
+
+
+# ---------------------------------------------------------------------------
+# double-buffered reference snapshots
+# ---------------------------------------------------------------------------
+
+def test_snapshot_consistent_under_concurrent_upserts():
+    """Writers mutate while readers snapshot: every snapshot must be an
+    internally consistent sorted view (keys aligned with payload), never a
+    torn one."""
+    t = RefTable("x", 4096, {"v": np.int64})
+    keys = np.arange(512, dtype=np.int64)
+    t.upsert(keys, v=keys * 2)
+    stop = threading.Event()
+    errs = []
+
+    def writer():
+        i = 512
+        while not stop.is_set():
+            ks = np.arange(i, i + 8, dtype=np.int64) % 3000
+            t.upsert(ks, v=ks * 2)
+            i += 8
+
+    def reader():
+        try:
+            for _ in range(300):
+                s = t.snapshot()
+                key = s.arrays["key"][:s.size]
+                assert (np.diff(key) > 0).all(), "unsorted/torn keys"
+                assert (key != KEY_SENTINEL).all()
+                np.testing.assert_array_equal(s.arrays["v"][:s.size],
+                                              key * 2)
+        except BaseException as e:   # surfaced after join
+            errs.append(e)
+
+    w = threading.Thread(target=writer, daemon=True)
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    w.start()
+    for r in readers:
+        r.start()
+    for r in readers:
+        r.join(60)
+    stop.set()
+    w.join(10)
+    assert not errs, errs[0]
+
+
+def test_snapshot_cached_until_write_then_fresh():
+    t = RefTable("y", 64, {"v": np.int32})
+    t.upsert(np.array([3, 1], np.int64), v=np.array([30, 10], np.int32))
+    s1 = t.snapshot()
+    assert s1 is t.snapshot()                       # cached, zero-copy
+    t.upsert(np.array([2], np.int64), v=np.array([20], np.int32))
+    s2 = t.snapshot()
+    assert s2.version > s1.version
+    np.testing.assert_array_equal(s2.arrays["key"][:3], [1, 2, 3])
+    np.testing.assert_array_equal(s2.arrays["v"][:3], [10, 20, 30])
+    # the old snapshot is immutable history (Model 2: state as of pickup)
+    np.testing.assert_array_equal(s1.arrays["key"][:2], [1, 3])

@@ -41,7 +41,8 @@ def test_scan_flops_scale_with_trip_count():
         cost = hlocost.analyze_text(txt)
         assert cost.flops == trips * one_mm, (trips, cost.flops)
         # XLA's own analysis reports one body only — document the delta
-        xla = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
+        xla = hlocost.xla_cost_analysis(
+            jax.jit(f).lower(x, ws).compile())["flops"]
         assert xla < 1.01 * one_mm     # body counted once, not x trips
 
 
@@ -96,8 +97,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 import repro
 from repro.launch import hlocost
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((8,), ("model",))
 def body(c, w):
     return c @ w, None                      # w sharded on contracting dim
 def f(x, ws):

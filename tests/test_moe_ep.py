@@ -31,8 +31,8 @@ from repro.models.params import init_tree
 from repro.models.sharding import sharding_ctx
 
 # 2 (data) x 4 (model) mesh; 8 experts -> 2 per model shard
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 cfg = smoke_config("olmoe-1b-7b").replace(
     num_experts=8, experts_per_token=2, capacity_factor=8.0,
     dtype="float32", param_dtype="float32")

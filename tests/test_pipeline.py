@@ -9,6 +9,8 @@ import time
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (FeedConfig, FeedManager, PartitionHolder,
