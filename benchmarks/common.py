@@ -69,7 +69,9 @@ def set_dispatch(mode: str) -> None:
 def run_feed(mgr: FeedManager, name: str, total: int, batch: int,
              udf=None, framework: str = "new", partitions: int = 2,
              model: str = "per_batch", refresh: str = "always",
-             coalesce_rows: int = 0):
+             coalesce_rows=None):
+    """coalesce_rows=None is the production default (auto: on for the
+    decoupled framework); pass 0 for exact-invocation comparisons."""
     cfg = FeedConfig(name=name, udf=udf, batch_size=batch,
                      num_partitions=partitions, framework=framework,
                      model=model, refresh=refresh,

@@ -20,6 +20,13 @@ probe rows under the selected mode — the operator-level speedup the
 framework-level numbers build on.  Off-TPU the pallas path is interpret-
 mode emulation: expect it to LOSE there; the comparison is meaningful on
 TPU hardware.
+
+Plan axis (``--plan chained``): a fused Q1->Q2->Q3 ``IngestPlan`` (one
+declarative pipeline, ONE predeployed apply per batch) vs. the same three
+enrichments as three sequential single-UDF feeds — the chaining win the
+plan API exists for.  Plus a sustained-backlog section measuring the
+default-on worker coalescer (coalesce_rows auto vs 0) against a replayed
+pre-generated stream, so intake always outruns computing.
 """
 
 from __future__ import annotations
@@ -34,9 +41,11 @@ import numpy as np
 from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
                                add_dispatch_arg, emit, make_manager,
                                run_feed, set_dispatch)
-from repro.core import ComputingRunner, ComputingSpec
+from repro.core import (ComputingRunner, ComputingSpec, FeedConfig,
+                        SyntheticAdapter, pipeline)
 from repro.core.enrich import dispatch as D
 from repro.core.enrich import ops
+from repro.core.intake import Adapter
 from repro.core.records import SyntheticTweets, parse_json_lines
 from repro.core.refdata import KEY_SENTINEL
 from repro.core.enrich import queries as Q
@@ -107,8 +116,92 @@ def bench_hash_probe(nprobe: int, nref: int = 65_536, iters: int = 5,
     return nprobe * iters / (time.perf_counter() - t0)
 
 
+class ReplayAdapter(Adapter):
+    """Pre-generated frames, replayed at memory speed: intake always
+    outruns computing, so the feed runs under sustained backlog (the
+    regime the worker coalescer is for)."""
+
+    def __init__(self, frames):
+        super().__init__()
+        self._frames = frames
+
+    def frames(self):
+        for f in self._frames:
+            if self._stop.is_set():
+                return
+            yield f
+
+
+def bench_chained_plan(mgr, total: int, batch: int = BATCH_1X) -> None:
+    """--plan chained: fused Q1->Q2->Q3 IngestPlan vs three sequential
+    single-UDF feeds over the same stream.  coalesce_rows=0 on BOTH sides:
+    this axis isolates stage fusion; the coalescer (which would change
+    each side's effective batch sizes under backlog) has its own A/B."""
+    chain_udfs = {"q1": Q.Q1, "q2": Q.Q2, "q3": Q.Q3}
+    seq_wall, seq_inv = 0.0, 0
+    for qname, udf in chain_udfs.items():
+        s = run_feed(mgr, f"f25-seq-{qname}", total, batch, udf=udf,
+                     framework="new", partitions=2, coalesce_rows=0)
+        seq_wall += s.wall_s
+        seq_inv += s.computing.invocations
+    emit(FIG, "chain_q123_sequential", total / seq_wall, "rec/s",
+         f"3 single-UDF feeds back to back, invocations={seq_inv}")
+
+    # ONE fused udf for both the warm and the timed plan: the predeploy
+    # cache keys on function identity, so re-composing the chain per plan
+    # would defeat the warm-up
+    fused = Q.Q1.then(Q.Q2).then(Q.Q3)
+
+    def chained_plan(name, n):
+        return (pipeline(SyntheticAdapter(total=n, frame_size=batch,
+                                          seed=11), name)
+                .parse(batch_size=batch)
+                .options(num_partitions=2, coalesce_rows=0)
+                .enrich(fused)
+                .store())
+
+    # warm the fused apply executable: the sequential feeds above were
+    # warmed by fig25's earlier sections, so without this the fused side
+    # would be the only one paying a first compile inside the timed run
+    mgr.submit(chained_plan("f25-chained-warm", 2 * batch)).join(
+        timeout=1200)
+    h = mgr.submit(chained_plan("f25-chained", total))
+    s = h.join(timeout=1200)
+    assert s.stored == total, (s.stored, total)
+    builds = {name: st.state_builds
+              for name, st in s.computing.per_stage.items()}
+    emit(FIG, "chain_q123_fused", s.records_per_s, "rec/s",
+         f"1 fused plan (single predeployed apply/batch), "
+         f"invocations={s.computing.invocations} vs sequential {seq_inv}; "
+         f"per-stage state_builds={builds}")
+
+
+def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
+                             ) -> None:
+    """Default-on coalescer under sustained backlog: auto (4x batch) vs
+    off, same pre-generated stream (before/after for CHANGES.md).  Two
+    passes per config; the first warms the predeploy cache (the auto path
+    compiles two extra bucket shapes, 2x/4x batch) and the second is the
+    emitted steady-state number."""
+    bl_total = max(total, 60_000)
+    src = SyntheticTweets(seed=23)
+    frames = list(src.batches(bl_total, batch))
+    for label, coal in (("off", 0), ("auto", None)):
+        for rnd in ("warmup", "steady"):
+            cfg = FeedConfig(name=f"f25-backlog-{label}-{rnd}", udf=Q.Q1,
+                             batch_size=batch, num_partitions=2,
+                             coalesce_rows=coal, holder_capacity=32)
+            h = mgr.start(cfg, ReplayAdapter(frames))
+            s = h.join(timeout=1200)
+            assert s.stored == bl_total, (s.stored, bl_total)
+        emit(FIG, f"backlog_coalesce_{label}", s.records_per_s, "rec/s",
+             f"replayed stream x{bl_total} rows, warm predeploy; "
+             f"invocations={s.computing.invocations} "
+             f"coalesced_frames={s.coalesced_frames}")
+
+
 def main(total: int = 8_000, dispatch: str = "auto",
-         probe_rows: int = 1_000_000) -> None:
+         probe_rows: int = 1_000_000, plan: str = "chained") -> None:
     set_dispatch(dispatch)
     tag = f"[dispatch={dispatch}]"
 
@@ -133,8 +226,13 @@ def main(total: int = 8_000, dispatch: str = "auto",
 
     for qname, udf in UDFS.items():
         for blabel, batch in batches:
+            # coalesce_rows=0: this sweep IS the paper's batch-size axis —
+            # the (default-on) backlog coalescer would silently turn the
+            # 1X point into ~4X batches; the coalescer gets its own
+            # dedicated A/B below (backlog_coalesce_{off,auto})
             s = run_feed(mgr, f"f25-{qname}-{blabel}", total, batch,
-                         udf=udf, framework="new", partitions=2)
+                         udf=udf, framework="new", partitions=2,
+                         coalesce_rows=0)
             emit(FIG, f"{qname}_sqlpp_{blabel}", s.records_per_s, "rec/s",
                  f"state_builds={s.computing.state_builds}")
         # current w/o updates (Model 3, coupled)
@@ -144,7 +242,8 @@ def main(total: int = 8_000, dispatch: str = "auto",
              "state built once; blind to reference updates")
         # beyond-paper: version-gated
         s = run_feed(mgr, f"f25-{qname}-gated", total, BATCH_1X, udf=udf,
-                     framework="new", partitions=2, refresh="version")
+                     framework="new", partitions=2, refresh="version",
+                     coalesce_rows=0)
         emit(FIG, f"{qname}_gated_1X", s.records_per_s, "rec/s",
              f"state_builds={s.computing.state_builds} (vs per-batch)")
         # beyond-paper: worker micro-batching (coalesce backlog into one
@@ -162,6 +261,10 @@ def main(total: int = 8_000, dispatch: str = "auto",
             emit(FIG, f"{qname}_python_{blabel}", rps, "rec/s",
                  "host-language UDF (Java analog)")
 
+    if plan == "chained":
+        bench_chained_plan(mgr, total)
+        bench_backlog_coalescing(mgr, total)
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -170,5 +273,9 @@ if __name__ == "__main__":
     ap.add_argument("--probe-rows", type=int, default=1_000_000,
                     help="hash-probe microbench probe rows (>= 1M for the "
                          "paper-scale measurement)")
+    ap.add_argument("--plan", choices=["none", "chained"],
+                    default="chained",
+                    help="chained: fused Q1->Q2->Q3 IngestPlan vs three "
+                         "sequential feeds + backlog-coalescing A/B")
     args = ap.parse_args()
-    main(args.total, args.dispatch, args.probe_rows)
+    main(args.total, args.dispatch, args.probe_rows, args.plan)

@@ -69,10 +69,18 @@ def derived_time(t_compute, c_inv, inv, nodes):
     return t_compute / nodes + inv * c_inv * (1 + 0.1 * (nodes - 1))
 
 
-def main(total: int = 3_000, dispatch: str = "auto") -> None:
+def main(total: int = 3_000, dispatch: str = "auto",
+         plan: str = "chained") -> None:
     set_dispatch(dispatch)
     mgr = make_manager(scale=0.02)
-    for qname, udf in UDFS.items():
+    udfs = dict(UDFS)
+    if plan == "chained":
+        # the plan API's fused chain as its own scaling point: one
+        # invocation (and one per-invocation overhead c_inv) carries all
+        # three stages, so the chain scales like a complex UDF even though
+        # its stages are simple ones (Q1-Q3 individually scale poorly)
+        udfs["q1q2q3_fused"] = Q.Q1.then(Q.Q2).then(Q.Q3)
+    for qname, udf in udfs.items():
         for blabel, batch in (("1X", BATCH_1X), ("4X", BATCH_4X),
                               ("16X", BATCH_16X)):
             wall, t_c, c_inv, inv = measure(udf, total, batch, mgr)
@@ -88,5 +96,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     add_dispatch_arg(ap)
     ap.add_argument("--total", type=int, default=3_000)
+    ap.add_argument("--plan", choices=["none", "chained"],
+                    default="chained",
+                    help="chained: add the fused Q1>Q2>Q3 plan-API chain "
+                         "as a scaling point")
     args = ap.parse_args()
-    main(args.total, args.dispatch)
+    main(args.total, args.dispatch, args.plan)

@@ -9,6 +9,10 @@ Equivalent of the paper's DDL (Figures 1, 4, 8, 12):
     START FEED TweetFeed;
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+(This uses the FeedConfig compatibility shim — one UDF, one sink.  The
+declarative plan API with chained UDFs, filters, projection and multi-sink
+fan-out is examples/pipeline_quickstart.py.)
 """
 
 import numpy as np

@@ -9,6 +9,14 @@ from repro.core.computing import (  # noqa: F401
     ComputingStats,
 )
 from repro.core.feed import FeedConfig, FeedHandle, FeedManager  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    IngestPlan,
+    Pipeline,
+    PlanError,
+    SinkSpec,
+    StoreSpec,
+    pipeline,
+)
 from repro.core.intake import (  # noqa: F401
     Adapter,
     FileAdapter,

@@ -40,6 +40,24 @@ from repro.core.refdata import RefSnapshot, RefStore
 
 
 @dataclasses.dataclass
+class StageStats:
+    """Per-stage observability for fused (chained) UDFs: how often each
+    stage's intermediate state was rebuilt vs reused and what it cost.
+    Apply time cannot be attributed per stage — the whole chain is ONE
+    fused executable by design — so only the state side is split."""
+    invocations: int = 0
+    records: int = 0
+    state_builds: int = 0
+    state_reuses: int = 0
+    state_s: float = 0.0
+
+    def merge(self, other: "StageStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+@dataclasses.dataclass
 class ComputingStats:
     invocations: int = 0
     records: int = 0
@@ -50,9 +68,23 @@ class ComputingStats:
     apply_s: float = 0.0
     state_builds: int = 0
     state_reuses: int = 0
+    # stage name -> StageStats, populated per enrichment stage (one entry
+    # for a plain UDF, one per chained stage for a fused UDF)
+    per_stage: Dict[str, StageStats] = dataclasses.field(
+        default_factory=dict)
+
+    def stage(self, name: str) -> StageStats:
+        s = self.per_stage.get(name)
+        if s is None:
+            s = self.per_stage[name] = StageStats()
+        return s
 
     def merge(self, other: "ComputingStats") -> None:
         for f in dataclasses.fields(self):
+            if f.name == "per_stage":
+                for name, ss in other.per_stage.items():
+                    self.stage(name).merge(ss)
+                continue
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
 
@@ -77,6 +109,9 @@ class ComputingRunner:
         self._device_refs: Dict[str, Tuple[int, Dict[str, jax.Array]]] = {}
         self._state = None            # (versions, state) for stream/gated
         self._state_versions: Optional[Tuple[int, ...]] = None
+        # fused UDFs: stage name -> (stage ref versions, state) so quiet
+        # stages reuse their state while stale stages rebuild independently
+        self._stage_states: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
 
     # ------------------------------------------------------------- snapshots
     TRIM_QUANTUM = 256
@@ -110,6 +145,45 @@ class ComputingRunner:
         return out
 
     # ----------------------------------------------------------------- state
+    def _get_staged_state(self, refs, snaps: Dict[str, RefSnapshot]):
+        """State for a fused UDF, built/refreshed per stage: each stage's
+        state is keyed by the versions of the tables *that stage* reads, so
+        under ``refresh="version"`` an upsert rebuilds only the stages it
+        affects (Model-2 freshness per stage, Model-3 cost for the quiet
+        ones).  ``refresh="always"`` rebuilds every stateful stage per
+        batch, exactly like an unfused Model-2 UDF."""
+        udf, spec = self.spec.udf, self.spec
+        states = []
+        for stage in udf.stages:
+            if stage.state_fn is None:
+                states.append(())
+                continue
+            ss = self.stats.stage(stage.name)
+            sversions = tuple(snaps[t].version for t in stage.ref_tables)
+            prev = self._stage_states.get(stage.name)
+            reuse = prev is not None and (
+                spec.model == "stream"
+                or (spec.model == "per_batch"
+                    and spec.refresh == "version"
+                    and prev[0] == sversions))
+            if reuse:
+                ss.state_reuses += 1
+                self.stats.state_reuses += 1
+                states.append(prev[1])
+                continue
+            t0 = time.perf_counter()
+            state = self.cache.invoke(f"state:{udf.name}:{stage.name}",
+                                      stage.state_fn, refs)
+            state = jax.block_until_ready(state)
+            dt = time.perf_counter() - t0
+            ss.state_builds += 1
+            ss.state_s += dt
+            self.stats.state_builds += 1
+            self.stats.state_s += dt
+            self._stage_states[stage.name] = (sversions, state)
+            states.append(state)
+        return tuple(states)
+
     def _get_state(self, refs, versions):
         udf = self.spec.udf
         if udf.state_fn is None:
@@ -177,7 +251,10 @@ class ComputingRunner:
         if self.spec.model == "per_record":
             enriched = self._run_per_record(dev_batch, refs, versions)
         else:
-            state = self._get_state(refs, versions)
+            if udf.stages and udf.state_fn is not None:
+                state = self._get_staged_state(refs, snaps)
+            else:
+                state = self._get_state(refs, versions)
             t0 = time.perf_counter()
             enriched = self.cache.invoke(
                 f"apply:{udf.name}", udf.apply_fn, dev_batch, state, refs)
@@ -191,6 +268,10 @@ class ComputingRunner:
         self.stats.convert_s += time.perf_counter() - t0
         self.stats.invocations += 1
         self.stats.records += nvalid
+        for st in (udf.stages or (udf,)):
+            ss = self.stats.stage(st.name)
+            ss.invocations += 1
+            ss.records += nvalid
         return out
 
     def _run_per_record(self, dev_batch, refs, versions):

@@ -32,6 +32,11 @@ kernels pad the reference block internally.
 ``segment_topk`` has no Pallas kernel yet (the composite-key argsort in
 ops.py is already a single XLA sort); it is routed for API completeness and
 always takes the reference path.
+
+Fused UDF chains (core/plan.py) trace every stage's operators into ONE
+predeployed executable, so a chained Q1->Q2->Q3 plan pays one dispatch per
+batch total, not one per stage; routing/bucketing decisions here happen at
+trace time and are baked into that single executable.
 """
 
 from __future__ import annotations
@@ -44,7 +49,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.refdata import KEY_SENTINEL
-from repro.kernels import get_dispatch_mode, resolve_use_pallas
+from repro.kernels import (dispatch_mode,  # noqa: F401  (re-export: scoped
+                           # mode override — plan tests force "reference"
+                           # to compare fused vs sequential bit-for-bit)
+                           get_dispatch_mode, resolve_use_pallas)
 from repro.kernels.hash_probe import ops as hp_ops
 from repro.kernels.segment_reduce import ops as sr_ops
 from repro.kernels.spatial_join import ops as sj_ops

@@ -71,6 +71,12 @@ class EnrichUDF:
     state_fn: Optional[Callable]   # refs -> state (None = stateless probe)
     apply_fn: Callable             # (batch, state, refs) -> enriched cols
     operators: str                 # paper's operator mix, for reports
+    # non-empty for fused UDFs (built by ``chain``/``then``): the original
+    # single-stage UDFs, in application order.  The computing runner uses
+    # this to build/refresh intermediate state per stage (Model-2 semantics
+    # per stage) and to attribute per-stage ComputingStats, while the apply
+    # side stays ONE predeployed executable for the whole chain.
+    stages: Tuple["EnrichUDF", ...] = ()
 
     @property
     def stateless(self) -> bool:
@@ -83,6 +89,17 @@ class EnrichUDF:
 
     def __call__(self, batch, state, refs):
         return self.apply_fn(batch, state, refs)
+
+    def then(self, other: "EnrichUDF",
+             name: Optional[str] = None) -> "EnrichUDF":
+        """Left-to-right composition: ``a.then(b)`` applies ``a`` first and
+        ``b`` second (``b`` sees ``a``'s output columns, SQL++ LET-style) —
+        fused into ONE predeployed apply per batch with the union of both
+        ref tables.  Flattens nested compositions so
+        ``q1.then(q2).then(q3)`` is a flat three-stage chain."""
+        mine = self.stages or (self,)
+        theirs = other.stages or (other,)
+        return chain(name or f"{self.name}>{other.name}", *mine, *theirs)
 
 
 def _valid(table: Dict[str, Array]) -> Array:
@@ -330,29 +347,50 @@ Q7 = EnrichUDF("q7_worrisome_tweets",
 # ---------------------------------------------------------------------------
 
 def chain(name: str, *udfs: EnrichUDF) -> EnrichUDF:
-    """Compose UDFs left-to-right: states are built independently, outputs
-    merged; later UDFs see earlier outputs in the batch (SQL++ LET-style)."""
-    tables = tuple(dict.fromkeys(t for u in udfs for t in u.ref_tables))
-    has_state = any(u.state_fn is not None for u in udfs)
+    """Compose UDFs left-to-right into ONE fused UDF: states are built
+    independently (per stage, so the runner can refresh/reuse them at stage
+    granularity), outputs merged; later UDFs see earlier outputs in the
+    batch (SQL++ LET-style).  The fused ``apply_fn`` runs the whole chain in
+    a single jit / predeployed executable — one kernel dispatch per batch
+    instead of one per stage.  Nested chains flatten."""
+    flat: Tuple[EnrichUDF, ...] = tuple(
+        s for u in udfs for s in (u.stages or (u,)))
+    tables = tuple(dict.fromkeys(t for u in flat for t in u.ref_tables))
+    has_state = any(u.state_fn is not None for u in flat)
 
     def state_fn(refs):
         return tuple(u.state_fn(refs) if u.state_fn is not None else ()
-                     for u in udfs)
+                     for u in flat)
 
     def apply_fn(batch, state, refs):
         out = {}
         cur = dict(batch)
-        for u, s in zip(udfs, state):
+        for u, s in zip(flat, state):
             res = u.apply_fn(cur, s, refs)
             out.update(res)
             cur.update(res)
         return out
 
-    ops_mix = " | ".join(u.operators for u in udfs)
+    ops_mix = " | ".join(u.operators for u in flat)
     return EnrichUDF(name, tables, state_fn if has_state else None,
                      apply_fn if has_state else
-                     (lambda b, s, r: apply_fn(b, ((),) * len(udfs), r)),
-                     ops_mix)
+                     (lambda b, s, r: apply_fn(b, ((),) * len(flat), r)),
+                     ops_mix, stages=flat)
+
+
+def make_filter(name: str, pred: Callable[[Dict[str, Array]], Array]
+                ) -> EnrichUDF:
+    """A filter stage as a stateless UDF: rows where ``pred(batch)`` is
+    False have their ``valid`` flag cleared, so every downstream sink (the
+    storage job, tee'd consumers, the LM data plane) drops them.  Because
+    it is an ``EnrichUDF`` it fuses into the chain's single predeployed
+    apply — a declarative WHERE pushed into ingestion, not a host-side
+    post-pass.  ``pred`` sees enriched columns of earlier stages."""
+    def apply_fn(batch, state, refs):
+        keep = pred(batch)
+        return {"valid": batch["valid"] & keep.astype(bool)}
+
+    return EnrichUDF(name, (), None, apply_fn, "filter")
 
 
 LM_RESERVED = 16

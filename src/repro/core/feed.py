@@ -1,17 +1,38 @@
-"""The Active Feed Manager (§7.1) and feed lifecycle.
+"""The Active Feed Manager (§7.1): executes declarative ingestion plans.
 
-``FeedManager.start`` wires the three-job pipeline of Fig 23:
+The primary entry point is the **plan API** (core/plan.py):
+
+    plan = (pipeline(adapter, "tweets").parse(batch_size=420)
+            .enrich(Q.Q1).enrich(Q.Q2)          # fused: ONE apply per batch
+            .filter(pred).project("safety_level", ...)
+            .tee(lm_sink).store(spill_dir=...))  # multi-sink fan-out
+    handle = manager.submit(plan)                # -> FeedHandle
+
+``submit`` wires the compiled plan onto the three-job pipeline of Fig 23:
 
     intake job  ->  [passive intake holders]  ->  computing workers
-                ->  [active storage holder]   ->  storage job
+                ->  [one active sink holder PER SINK]  ->  storage job
+                                                        / tee consumers
 
-and keeps invoking computing jobs while data flows (here: a worker loop per
+and keeps invoking computing jobs while data flows (a worker loop per
 partition — each ``ComputingRunner.run`` call is one computing-job
-invocation, counted and timed).  Stop protocol per §7.1: the adapter ends,
-the intake job enqueues StopRecords, computing workers drain and finish
-partial batches, the storage holder closes after the last worker.
+invocation, counted and timed, with per-stage ``ComputingStats`` for fused
+chains).  Every enriched batch is pushed to every sink holder exactly once;
+each sink drains its own bounded queue, so one slow sink backpressures the
+feed without corrupting another sink's delivery.  Stop protocol per §7.1:
+the adapter ends, the intake job enqueues StopRecords, computing workers
+drain and finish partial batches, the sink holders close after the last
+worker.  Completed feeds deregister from the manager (name + holder IDs
+become reusable).
 
-Also implements the paper's baselines for §8's comparisons:
+**Compatibility shim:** ``FeedManager.start(FeedConfig(...), adapter)`` is
+the pre-plan API, kept as a thin layer that builds a one-stage plan (one
+``udf`` slot, one sink) and submits it.  New call sites should build plans;
+``FeedConfig`` gains no new features and its direct-execution path is gone
+— deprecation path: shim today, emit ``DeprecationWarning`` once the
+benchmarks/drivers migrate, remove after the scale-out PRs stop exercising
+it.  The paper-baseline frameworks stay cfg-only (they are measurement
+rigs, not plans):
 
   framework="current"   coupled single job, single parsing node, Model-3
                         state (AsterixDB data feeds with a Java UDF)
@@ -19,6 +40,7 @@ Also implements the paper's baselines for §8's comparisons:
   framework="insert"    Approach 1: repeated INSERT statements — every
                         batch pays query compilation (no predeploy cache)
   framework="new"       this paper: decoupled + predeployed + Model 2
+                        (lowered onto the plan path)
 
 Fault tolerance: per-invocation retry with exponential backoff; failed
 frames are re-enqueued (at-least-once) and the idempotent storage job makes
@@ -26,7 +48,7 @@ delivery effectively exactly-once.  Idle workers steal from the deepest
 holder (straggler mitigation).  ``FeedHandle.scale_up`` adds computing
 partitions mid-feed (elasticity — the round-robin partitioner re-targets).
 
-Cross-partition micro-batching (``coalesce_rows`` > 0): when a worker finds
+Cross-partition micro-batching (``coalesce_rows``): when a worker finds
 a backlog in its holder it coalesces queued frames — up to a row AND byte
 budget — into ONE kernel dispatch.  Per-invocation overhead (snapshot
 lookup, H2D, executable dispatch) is paid once per coalesced batch instead
@@ -34,7 +56,9 @@ of once per frame, which is the paper's batch-size lever (Fig 25/26)
 applied adaptively: an idle feed keeps per-frame latency, a backlogged feed
 converges to throughput-optimal batches.  Coalesced batches are padded to
 power-of-two row buckets (enrich/dispatch.py) so they never trigger
-per-size recompiles.
+per-size recompiles.  Default (``coalesce_rows=None``): ON at 4x the batch
+size for the decoupled framework, OFF for the baselines (whose per-batch
+cost model the coalescer would distort).
 """
 
 from __future__ import annotations
@@ -56,9 +80,15 @@ from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
                                          PartitionHolderManager, STOP,
                                          StopRecord)
+from repro.core.plan import IngestPlan, Pipeline, pipeline
 from repro.core.predeploy import PredeployCache
 from repro.core.refdata import RefStore
 from repro.core.storage import StorageJob
+
+# coalesce_rows=None resolves to this many batches' worth of rows for the
+# decoupled framework (ROADMAP item: benchmarked under sustained backlog —
+# numbers in CHANGES.md PR 2)
+COALESCE_DEFAULT_BATCHES = 4
 
 
 def _frame_rows(frame) -> int:
@@ -75,6 +105,14 @@ def _frame_bytes(frame) -> int:
 
 @dataclasses.dataclass
 class FeedConfig:
+    """Compatibility shim over the plan API (core/plan.py).
+
+    Historically the whole public surface: one ``udf`` slot, one sink.
+    ``FeedManager.start`` now lowers a framework="new" FeedConfig onto a
+    one-stage ``IngestPlan`` and submits it; multi-stage chains, filters,
+    projections and multi-sink tees are plan-only.  Deprecation path: this
+    shim stays source-compatible for existing tests/benchmarks; new code
+    should use ``pipeline(...)``/``FeedManager.submit``."""
     name: str = "feed"
     udf: Optional[EnrichUDF] = None
     batch_size: int = 420                 # the paper's 1X
@@ -91,9 +129,10 @@ class FeedConfig:
     holder_capacity: int = 8
     # cross-partition micro-batching: coalesce queued frames into one
     # computing-job invocation up to this many rows (0 disables) and
-    # coalesce_bytes raw bytes.  Ignored for model="per_record", whose
-    # semantics are inherently per-row.
-    coalesce_rows: int = 0
+    # coalesce_bytes raw bytes.  None = auto: COALESCE_DEFAULT_BATCHES x
+    # batch_size for framework="new", 0 for the baselines.  Ignored for
+    # model="per_record", whose semantics are inherently per-row.
+    coalesce_rows: Optional[int] = None
     coalesce_bytes: int = 8 << 20
     # test hook: raises inside the computing job when it returns True
     fault_hook: Optional[Callable[[int], bool]] = None
@@ -101,6 +140,14 @@ class FeedConfig:
     # storage job (the LM data plane consumes batches directly — see
     # train/data_feed.py)
     sink: Optional[Callable[[Dict], None]] = None
+
+    @property
+    def resolved_coalesce_rows(self) -> int:
+        if self.coalesce_rows is not None:
+            return self.coalesce_rows
+        if self.framework == "new":
+            return COALESCE_DEFAULT_BATCHES * self.batch_size
+        return 0
 
 
 @dataclasses.dataclass
@@ -116,6 +163,9 @@ class FeedStats:
         default_factory=ComputingStats)
     predeploy: Dict = dataclasses.field(default_factory=dict)
     storage_write_s: float = 0.0
+    # multi-sink fan-out: sink name -> batches delivered (exactly-once per
+    # sink per enriched batch)
+    sink_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def records_per_s(self) -> float:
@@ -124,8 +174,9 @@ class FeedStats:
 
 class FeedHandle:
     def __init__(self, cfg: FeedConfig, manager: "FeedManager",
-                 adapter: Adapter):
+                 adapter: Adapter, plan: Optional[IngestPlan] = None):
         self.cfg = cfg
+        self.plan = plan            # None for the cfg-only baseline paths
         self.manager = manager
         self.adapter = adapter
         self.storage: Optional[StorageJob] = None
@@ -133,6 +184,10 @@ class FeedHandle:
         self.holders: List[PartitionHolder] = []
         self.workers: List[threading.Thread] = []
         self.runners: List[ComputingRunner] = []
+        # one active holder per sink (plan fan-out); storage_holder aliases
+        # the first for pre-plan call sites
+        self.sink_holders: List[ActivePartitionHolder] = []
+        self._sink_names: List[str] = []
         self.storage_holder: Optional[ActivePartitionHolder] = None
         self.stats = FeedStats()
         self._t0 = 0.0
@@ -140,6 +195,9 @@ class FeedHandle:
         self._worker_errs: List[BaseException] = []
         self._invocation_counter = 0
         self._live_workers = 0
+        self._finalized = False
+        self._deregistered = False
+        self._sinks_dead = False    # all sink consumers failed: discard
 
     # ------------------------------------------------------------- lifecycle
     def stop(self) -> None:
@@ -152,18 +210,34 @@ class FeedHandle:
             self.intake.join(timeout)
         for w in self.workers:
             w.join(timeout)
-        if self.storage_holder is not None:
-            # last computing job done -> storage stops
-            self.storage_holder.close()
-            self.storage_holder.join(timeout)
-        if self._worker_errs:
-            raise self._worker_errs[0]
-        if self.intake is not None and self.intake.error is not None:
-            raise self.intake.error
-        self._finalize()
+        try:
+            if not self._finalized:
+                for sh in self.sink_holders:
+                    # last computing job done -> sinks stop
+                    sh.close()
+                sink_err: Optional[BaseException] = None
+                for sh in self.sink_holders:
+                    try:
+                        # join EVERY sink before raising: healthy sinks
+                        # must finish draining even when another failed
+                        sh.join(timeout)
+                    except BaseException as e:
+                        sink_err = sink_err or e
+                if sink_err is not None:
+                    raise sink_err
+            if self._worker_errs:
+                raise self._worker_errs[0]
+            if self.intake is not None and self.intake.error is not None:
+                raise self.intake.error
+            self._finalize()
+        finally:
+            self._deregister()
         return self.stats
 
     def _finalize(self) -> None:
+        if self._finalized:
+            return
+        self._finalized = True
         self.stats.wall_s = time.perf_counter() - self._t0
         if self.intake is not None:
             self.stats.records_in = self.intake.records_in
@@ -173,7 +247,27 @@ class FeedHandle:
             self.stats.storage_write_s = self.storage.write_s
         for r in self.runners:
             self.stats.computing.merge(r.stats)
+        for name, sh in zip(self._sink_names, self.sink_holders):
+            self.stats.sink_batches[name] = sh.pulled
         self.stats.predeploy = self.manager.predeploy.stats()
+
+    def _deregister(self) -> None:
+        """Release the feed's name and holder IDs once every thread is done
+        so the same feed name can be started again (restart-after-stop)."""
+        if self._deregistered:
+            return
+        if any(w.is_alive() for w in self.workers):
+            return
+        if self.intake is not None and self.intake.is_alive():
+            return
+        if any(sh._thread.is_alive() for sh in self.sink_holders):
+            return
+        self._deregistered = True
+        hm = self.manager.holder_manager
+        for h in self.holders + self.sink_holders:
+            hm.unregister(h.holder_id)
+        if self.manager.feeds.get(self.cfg.name) is self:
+            del self.manager.feeds[self.cfg.name]
 
     # ------------------------------------------------------------ elasticity
     def scale_up(self, extra_partitions: int) -> None:
@@ -208,13 +302,14 @@ class FeedHandle:
         """Merge backlogged frames (same representation only) into one
         computing batch, bounded by the row/byte budgets."""
         cfg = self.cfg
-        if cfg.coalesce_rows <= 0 or cfg.model == "per_record":
+        budget = cfg.resolved_coalesce_rows
+        if budget <= 0 or cfg.model == "per_record":
             return frame
         kind = dict if isinstance(frame, dict) else list
         group = [frame]
         rows = _frame_rows(frame)
         nbytes = _frame_bytes(frame)
-        while rows < cfg.coalesce_rows and nbytes < cfg.coalesce_bytes:
+        while rows < budget and nbytes < cfg.coalesce_bytes:
             extra = holder.pull_nowait(lambda f: isinstance(f, kind))
             if extra is None:
                 break
@@ -271,16 +366,50 @@ class FeedHandle:
                     frame = stolen
                     with self._lock:
                         self.stats.steals += 1
+                if self._sinks_dead:
+                    # no live sink: computing would silently discard the
+                    # output anyway — drain frames without enriching so
+                    # the intake never blocks and join() can surface the
+                    # sink error promptly
+                    continue
                 frame = self._coalesce(holder, frame)
                 t0 = time.perf_counter()
                 out = self._run_with_retry(runner, frame)
                 holder.record_service(time.perf_counter() - t0)
-                self.storage_holder.push(out)
+                out = self._project(out)
+                # fan-out: every sink holder gets every batch exactly once
+                delivered = 0
+                for sh in self.sink_holders:
+                    if sh.error is not None:
+                        # sink consumer raised: its holder closed itself
+                        # (fail-fast drain); keep feeding the healthy
+                        # sinks — the error is re-raised by join()
+                        continue
+                    try:
+                        sh.push(out)
+                        delivered += 1
+                    except RuntimeError:
+                        if sh.error is None:     # not a sink failure
+                            raise
+                if delivered == 0 and self.sink_holders:
+                    # every sink is dead: stop the adapter and switch to
+                    # discard-drain (below) so the stop protocol still
+                    # completes; the sink error surfaces from join()
+                    self._sinks_dead = True
+                    self.adapter.stop()
         except BaseException as e:
             self._worker_errs.append(e)
         finally:
             with self._lock:
                 self._live_workers -= 1
+
+    def _project(self, out: Dict) -> Dict:
+        """Plan-level projection: restrict the columns sinks receive (id +
+        valid always flow).  Cheap dict subset — the arrays are shared, not
+        copied; sinks must treat batches as read-only (they already do)."""
+        if self.plan is None or self.plan.project_cols is None:
+            return out
+        return {k: out[k] for k in self.plan.project_cols if k in out}
 
 
 class FeedManager:
@@ -293,8 +422,62 @@ class FeedManager:
         self.holder_manager = PartitionHolderManager()
         self.feeds: Dict[str, FeedHandle] = {}
 
-    # ---------------------------------------------------------------- start
+    # --------------------------------------------------------------- submit
+    def submit(self, plan) -> FeedHandle:
+        """Execute a declarative ingestion plan (core/plan.py).  Accepts an
+        ``IngestPlan`` or an uncompiled ``Pipeline`` (compiled here against
+        this manager's refstore — all validation happens before any job
+        thread starts)."""
+        if isinstance(plan, Pipeline):
+            plan = plan.compile(self.refstore)
+        if not isinstance(plan, IngestPlan):
+            raise TypeError(f"submit() takes an IngestPlan or Pipeline, "
+                            f"got {type(plan).__name__}")
+        if plan.name in self.feeds:
+            raise KeyError(f"feed {plan.name} already active")
+        cfg = FeedConfig(
+            name=plan.name, udf=plan.udf, batch_size=plan.batch_size,
+            num_partitions=plan.num_partitions, model=plan.model,
+            refresh=plan.refresh, framework="new",
+            work_stealing=plan.work_stealing, max_retries=plan.max_retries,
+            retry_backoff_s=plan.retry_backoff_s,
+            holder_capacity=plan.holder_capacity,
+            coalesce_rows=plan.coalesce_rows,
+            coalesce_bytes=plan.coalesce_bytes,
+            fault_hook=plan.fault_hook)
+        handle = FeedHandle(cfg, self, plan.adapter, plan=plan)
+        self.feeds[plan.name] = handle
+        handle._t0 = time.perf_counter()
+        self._start_new(cfg, handle, plan)
+        return handle
+
+    # ----------------------------------------------------------- start shim
     def start(self, cfg: FeedConfig, adapter: Adapter) -> FeedHandle:
+        """Compatibility shim: a framework="new" FeedConfig is lowered onto
+        a one-stage plan and submitted; the coupled/insert baselines keep
+        their dedicated measurement paths."""
+        if cfg.framework == "new":
+            p = (pipeline(adapter, cfg.name)
+                 .parse(cfg.batch_size, cfg.model, cfg.refresh)
+                 .options(num_partitions=cfg.num_partitions,
+                          holder_capacity=cfg.holder_capacity,
+                          work_stealing=cfg.work_stealing,
+                          max_retries=cfg.max_retries,
+                          retry_backoff_s=cfg.retry_backoff_s,
+                          coalesce_rows=cfg.coalesce_rows,
+                          coalesce_bytes=cfg.coalesce_bytes,
+                          fault_hook=cfg.fault_hook))
+            if cfg.udf is not None:
+                p.enrich(cfg.udf)
+            if cfg.sink is not None:
+                # pre-plan semantics: the sink REPLACES the storage job
+                p.tee(cfg.sink, name="sink")
+            else:
+                p.store(partitions=cfg.storage_partitions or
+                        cfg.num_partitions,
+                        spill_dir=cfg.spill_dir, upsert=cfg.upsert)
+            return self.submit(p)
+
         if cfg.name in self.feeds:
             raise KeyError(f"feed {cfg.name} already active")
         handle = FeedHandle(cfg, self, adapter)
@@ -303,9 +486,7 @@ class FeedManager:
         nstore = cfg.storage_partitions or cfg.num_partitions
         handle.storage = StorageJob(nstore, cfg.spill_dir, cfg.upsert)
 
-        if cfg.framework == "new":
-            self._start_new(cfg, handle)
-        elif cfg.framework in ("current", "balanced"):
+        if cfg.framework in ("current", "balanced"):
             self._start_coupled(cfg, handle,
                                 balanced=cfg.framework == "balanced")
         elif cfg.framework == "insert":
@@ -314,13 +495,24 @@ class FeedManager:
             raise ValueError(cfg.framework)
         return handle
 
-    def _start_new(self, cfg: FeedConfig, handle: FeedHandle) -> None:
-        consumer = cfg.sink if cfg.sink is not None \
-            else handle.storage.write
-        handle.storage_holder = ActivePartitionHolder(
-            (f"{cfg.name}:storage", 0), consumer,
-            capacity=cfg.holder_capacity)
-        self.holder_manager.register(handle.storage_holder)
+    def _start_new(self, cfg: FeedConfig, handle: FeedHandle,
+                   plan: IngestPlan) -> None:
+        # one active holder per sink: the plan's multi-sink fan-out
+        for i, spec in enumerate(plan.sinks):
+            if spec.is_store:
+                nstore = spec.store.partitions or cfg.num_partitions
+                handle.storage = StorageJob(nstore, spec.store.spill_dir,
+                                            spec.store.upsert)
+                consumer = handle.storage.write
+            else:
+                consumer = spec.consumer
+            sh = ActivePartitionHolder(
+                (f"{cfg.name}:storage", i), consumer,
+                capacity=cfg.holder_capacity)
+            self.holder_manager.register(sh)
+            handle.sink_holders.append(sh)
+            handle._sink_names.append(spec.name)
+        handle.storage_holder = handle.sink_holders[0]
         for pid in range(cfg.num_partitions):
             holder = PartitionHolder((f"{cfg.name}:intake", pid),
                                      cfg.holder_capacity)
@@ -383,8 +575,12 @@ class FeedManager:
                     runner.cache = PredeployCache()   # recompilation cost
                     out = runner.run(frame)
                     handle.storage.write(out)
-                    handle.stats.frames_in += 1
-                    handle.stats.records_in += len(frame)
+                    # _frame_rows, not len(): a dict frame's len() is its
+                    # COLUMN count; take the handle lock — stats are also
+                    # read/merged from the joining thread
+                    with handle._lock:
+                        handle.stats.frames_in += 1
+                        handle.stats.records_in += _frame_rows(frame)
             except BaseException as e:
                 handle._worker_errs.append(e)
 

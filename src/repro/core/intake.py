@@ -16,7 +16,7 @@ import time
 from typing import Iterable, Iterator, List, Optional
 
 from repro.core.partition_holder import PartitionHolder
-from repro.core.records import SyntheticTweets
+from repro.core.records import SyntheticTweets, batch_rows
 
 
 class Adapter:
@@ -148,7 +148,10 @@ class IntakeJob(threading.Thread):
                 hs[i % len(hs)].push(frame)
                 i += 1
                 self.frames_in += 1
-                self.records_in += len(frame)
+                # dict frames arrive pre-parsed; len() would count COLUMNS
+                self.records_in += (batch_rows(frame)
+                                    if isinstance(frame, dict)
+                                    else len(frame))
         except BaseException as e:
             self.error = e
         finally:

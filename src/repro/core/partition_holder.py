@@ -173,7 +173,19 @@ class ActivePartitionHolder(PartitionHolder):
                 self.record_service(time.perf_counter() - t0)
             except BaseException as e:   # surfaced by join()
                 self._err = e
+                # fail fast, don't deadlock: close + drain so producers
+                # blocked in push() wake up (they see a closed holder)
+                # instead of waiting forever on a queue nobody drains
+                with self._lock:
+                    self._closed = True
+                    self._q.clear()
+                    self._not_full.notify_all()
+                    self._not_empty.notify_all()
                 return
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._err
 
     def join(self, timeout: Optional[float] = None) -> None:
         self._thread.join(timeout)

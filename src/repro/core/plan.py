@@ -1,0 +1,337 @@
+"""Declarative ingestion plans: the ``Pipeline`` builder and the immutable
+``IngestPlan`` it compiles into.
+
+The paper frames ingestion-time enrichment *declaratively* — a feed is a
+query plan (adapter -> parse -> UDFs -> dataset), compiled once and invoked
+per batch.  This module is that abstraction for this repo:
+
+    plan = (pipeline(adapter, "tweets")
+            .parse(batch_size=420)
+            .enrich(Q.Q1)
+            .enrich(Q.Q2)
+            .filter(lambda b: b["safety_level"] >= 0, name="joined_only")
+            .project("safety_level", "religious_population")
+            .tee(lm_data_plane_sink)
+            .store(spill_dir="/data/enriched"))
+    handle = manager.submit(plan)
+
+``compile()`` performs the whole-plan optimizations and validations that a
+per-batch runtime cannot:
+
+  * **Stage fusion** — consecutive ``enrich``/``filter`` stages fuse into
+    ONE ``EnrichUDF`` (``queries.chain``): a single predeployed apply (one
+    jit / one kernel dispatch per batch) over the union of the stages' ref
+    tables, with per-stage ``state_fn``s so Model-2/3 state semantics are
+    preserved *per stage* (see ``ComputingRunner._get_staged_state``).
+  * **Up-front validation** — every referenced table must exist in the
+    ``RefStore``, and each stage is abstractly traced (``jax.eval_shape``)
+    against the tweet schema + actual reference dtypes, so dtype/shape
+    errors and unknown columns raise ``PlanError`` at compile time, not
+    mid-feed in a worker thread.
+  * **Multi-sink lowering** — each ``tee``/``store`` sink becomes one
+    ``ActivePartitionHolder`` on the feed's fan-out, so every enriched
+    batch is delivered to every sink exactly once, each sink consuming
+    from its own bounded queue (independent backpressure).
+
+``FeedConfig`` + ``FeedManager.start`` remain as a thin compatibility shim
+that builds a one-stage plan (see feed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import records
+from repro.core.enrich.queries import EnrichUDF, chain, make_filter
+from repro.core.intake import Adapter
+from repro.core.refdata import RefStore
+
+
+class PlanError(ValueError):
+    """Invalid ingestion plan, detected at compile time."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """The storage-job sink (partitioned column store, see storage.py)."""
+    partitions: int = 0            # 0 -> plan.num_partitions
+    spill_dir: Optional[str] = None
+    upsert: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SinkSpec:
+    name: str
+    consumer: Optional[Callable[[Dict], None]] = None   # tee sink
+    store: Optional[StoreSpec] = None                   # storage sink
+
+    @property
+    def is_store(self) -> bool:
+        return self.store is not None
+
+
+# FeedConfig knobs a plan carries through to the feed runtime
+_OPTION_KEYS = ("num_partitions", "holder_capacity", "work_stealing",
+                "max_retries", "retry_backoff_s", "coalesce_rows",
+                "coalesce_bytes", "fault_hook")
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestPlan:
+    """A compiled, immutable ingestion plan.  ``FeedManager.submit``
+    executes it; everything here is validated and fused already."""
+    name: str
+    adapter: Adapter
+    udf: Optional[EnrichUDF]             # fused enrich+filter chain (or None)
+    stage_names: Tuple[str, ...]         # fused stages, in order
+    sinks: Tuple[SinkSpec, ...]          # >= 1; at most one store
+    output_columns: Tuple[str, ...]      # columns sinks receive (validated)
+    project_cols: Optional[Tuple[str, ...]] = None
+    batch_size: int = 420
+    model: str = "per_batch"
+    refresh: str = "always"
+    num_partitions: int = 1
+    holder_capacity: int = 8
+    work_stealing: bool = True
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    coalesce_rows: Optional[int] = None  # None -> feed.py's auto default
+    coalesce_bytes: int = 8 << 20
+    fault_hook: Optional[Callable[[int], bool]] = None
+
+    @property
+    def store_spec(self) -> Optional[StoreSpec]:
+        for s in self.sinks:
+            if s.is_store:
+                return s.store
+        return None
+
+
+def pipeline(adapter: Adapter, name: str = "pipeline") -> "Pipeline":
+    """Entry point of the declarative API: a builder over ``adapter``."""
+    return Pipeline(adapter, name)
+
+
+class Pipeline:
+    """Ordered stage recorder.  Builder calls only record; all validation
+    (ordering, ref tables, dtypes) happens in ``compile`` so a bad plan
+    fails in one place, before any job starts."""
+
+    def __init__(self, adapter: Adapter, name: str = "pipeline"):
+        self._adapter = adapter
+        self._name = name
+        self._parse: Dict[str, Any] = dict(batch_size=420,
+                                           model="per_batch",
+                                           refresh="always")
+        self._opts: Dict[str, Any] = {}
+        # ordered log of ("enrich"|"filter"|"project"|"tee"|"store", payload)
+        self._stages: list = []
+        self._n_filters = 0
+
+    # ------------------------------------------------------------- builders
+    def parse(self, batch_size: int = 420, model: str = "per_batch",
+              refresh: str = "always") -> "Pipeline":
+        self._parse = dict(batch_size=batch_size, model=model,
+                           refresh=refresh)
+        return self
+
+    def options(self, **kw: Any) -> "Pipeline":
+        """Feed-runtime knobs: num_partitions, holder_capacity,
+        work_stealing, max_retries, retry_backoff_s, coalesce_rows,
+        coalesce_bytes, fault_hook."""
+        for k in kw:
+            if k not in _OPTION_KEYS:
+                raise PlanError(f"unknown option {k!r} "
+                                f"(valid: {', '.join(_OPTION_KEYS)})")
+        self._opts.update(kw)
+        return self
+
+    def enrich(self, udf: EnrichUDF) -> "Pipeline":
+        self._stages.append(("enrich", udf))
+        return self
+
+    def filter(self, pred: Callable, name: Optional[str] = None
+               ) -> "Pipeline":
+        self._n_filters += 1
+        fname = name or f"filter_{self._n_filters}"
+        self._stages.append(("filter", make_filter(fname, pred)))
+        return self
+
+    def project(self, *cols: str) -> "Pipeline":
+        self._stages.append(("project", tuple(cols)))
+        return self
+
+    def tee(self, sink: Callable[[Dict], None],
+            name: Optional[str] = None) -> "Pipeline":
+        self._stages.append(("tee", (name, sink)))
+        return self
+
+    def store(self, partitions: int = 0, spill_dir: Optional[str] = None,
+              upsert: bool = False) -> "Pipeline":
+        self._stages.append(("store", StoreSpec(partitions, spill_dir,
+                                                upsert)))
+        return self
+
+    # -------------------------------------------------------------- compile
+    def compile(self, refstore: RefStore) -> IngestPlan:
+        """Validate + fuse + lower into an immutable ``IngestPlan``."""
+        udfs, project_cols, sinks = self._split_stages()
+        fused = self._fuse(udfs)
+        self._check_ref_tables(fused, refstore)
+        out_cols = _validate_dtypes(fused, refstore,
+                                    self._parse["batch_size"],
+                                    self._parse["model"])
+        if project_cols is not None:
+            unknown = [c for c in project_cols if c not in out_cols]
+            if unknown:
+                raise PlanError(
+                    f"project() references unknown column(s) {unknown}; "
+                    f"available: {sorted(out_cols)}")
+            # id + valid always flow: storage partitioning and validity
+            # masking depend on them
+            project_cols = tuple(dict.fromkeys(
+                ("id", "valid") + tuple(project_cols)))
+            delivered = project_cols
+        else:
+            delivered = tuple(out_cols)
+        return IngestPlan(
+            name=self._name, adapter=self._adapter, udf=fused,
+            stage_names=tuple(u.name for u in (
+                fused.stages or (fused,))) if fused is not None else (),
+            sinks=sinks, output_columns=delivered,
+            project_cols=project_cols, **self._parse, **self._opts)
+
+    # -------------------------------------------------------------- helpers
+    def _split_stages(self):
+        udfs: list = []
+        project_cols: Optional[Tuple[str, ...]] = None
+        sinks: list = []
+        seen_sink = False
+        store_seen = False
+        tee_auto = 0
+        for kind, payload in self._stages:
+            if kind in ("enrich", "filter", "project") and seen_sink:
+                raise PlanError(
+                    f"{kind}() after a sink stage (tee/store): transform "
+                    f"stages must precede all sinks")
+            if kind == "enrich":
+                if not isinstance(payload, EnrichUDF):
+                    raise PlanError(
+                        f"enrich() takes an EnrichUDF, got "
+                        f"{type(payload).__name__}")
+                udfs.append(payload)
+            elif kind == "filter":
+                udfs.append(payload)
+            elif kind == "project":
+                if project_cols is not None:
+                    raise PlanError("project() may appear at most once")
+                if not payload:
+                    raise PlanError("project() needs at least one column")
+                project_cols = payload
+            elif kind == "tee":
+                seen_sink = True
+                name, sink = payload
+                tee_auto += 1
+                sinks.append(SinkSpec(name or f"tee_{tee_auto}",
+                                      consumer=sink))
+            elif kind == "store":
+                seen_sink = True
+                if store_seen:
+                    raise PlanError("store() may appear at most once")
+                store_seen = True
+                sinks.append(SinkSpec("store", store=payload))
+        if not sinks:
+            raise PlanError(
+                "plan has no sink: end with .store(...) and/or .tee(sink)")
+        if self._parse["model"] not in ("per_record", "per_batch", "stream"):
+            raise PlanError(f"unknown model {self._parse['model']!r}")
+        if self._parse["refresh"] not in ("always", "version"):
+            raise PlanError(f"unknown refresh {self._parse['refresh']!r}")
+        return udfs, project_cols, tuple(sinks)
+
+    def _fuse(self, udfs) -> Optional[EnrichUDF]:
+        if not udfs:
+            return None
+        if len(udfs) == 1:
+            return udfs[0]   # keep the original predeploy cache identity
+        return chain(">".join(u.name for u in udfs), *udfs)
+
+    def _check_ref_tables(self, fused: Optional[EnrichUDF],
+                          refstore: RefStore) -> None:
+        if fused is None:
+            return
+        for stage in (fused.stages or (fused,)):
+            missing = [t for t in stage.ref_tables if t not in refstore]
+            if missing:
+                raise PlanError(
+                    f"stage {stage.name!r} references missing reference "
+                    f"table(s) {missing}: create/populate them in the "
+                    f"RefStore before compiling the plan")
+
+
+def _batch_struct(batch_size: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {}
+    for k, dt in records.TWEET_SCHEMA.items():
+        if dt.subdtype is not None:
+            base, shape = dt.subdtype
+            out[k] = jax.ShapeDtypeStruct((batch_size,) + shape, base)
+        else:
+            out[k] = jax.ShapeDtypeStruct((batch_size,), dt)
+    out["valid"] = jax.ShapeDtypeStruct((batch_size,), np.dtype(bool))
+    return out
+
+
+def _validate_dtypes(fused: Optional[EnrichUDF], refstore: RefStore,
+                     batch_size: int, model: str) -> Tuple[str, ...]:
+    """Abstractly trace every stage against the tweet schema and the actual
+    reference-table dtypes (``jax.eval_shape`` — no FLOPs, no compilation).
+    Returns the ordered output column names sinks will receive.  Raises
+    ``PlanError`` naming the offending stage for any dtype/shape/column
+    error, so misconfigured plans never reach a worker thread."""
+    batch = _batch_struct(batch_size)
+    cols = dict(batch)
+    if fused is None:
+        return tuple(cols)
+    b = 1 if model == "per_record" else batch_size
+    if model == "per_record":
+        batch = _batch_struct(1)
+        cols.update(batch)
+    for stage in (fused.stages or (fused,)):
+        refs = {}
+        for t in stage.ref_tables:
+            snap = refstore[t].snapshot()
+            refs[t] = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                       for k, v in snap.arrays.items()}
+        try:
+            state = (jax.eval_shape(stage.state_fn, refs)
+                     if stage.state_fn is not None else ())
+            out = jax.eval_shape(stage.apply_fn, batch, state, refs)
+        except PlanError:
+            raise
+        except Exception as e:
+            raise PlanError(
+                f"stage {stage.name!r} failed dtype/shape validation "
+                f"against the tweet schema and current reference tables: "
+                f"{type(e).__name__}: {e}") from e
+        if not isinstance(out, dict):
+            raise PlanError(
+                f"stage {stage.name!r} must return a dict of columns, "
+                f"got {type(out).__name__}")
+        for k, v in out.items():
+            if not hasattr(v, "shape") or not v.shape or v.shape[0] != b:
+                raise PlanError(
+                    f"stage {stage.name!r} output {k!r} must be batch-"
+                    f"aligned (leading dim {b}), got shape "
+                    f"{getattr(v, 'shape', None)}")
+            if k == "valid" and v.dtype != np.dtype(bool):
+                raise PlanError(
+                    f"stage {stage.name!r} rewrites 'valid' with dtype "
+                    f"{v.dtype}; filters must keep it bool")
+        batch = dict(batch)
+        batch.update(out)
+        cols.update(out)
+    return tuple(cols)

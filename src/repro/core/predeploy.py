@@ -45,11 +45,27 @@ class PredeployCache:
         self.compiles = 0
         self.invocations = 0
         self.compile_s = 0.0
+        # per-job-name breakdown: tests pin down that a fused chain is ONE
+        # apply executable (one compile per shape) instead of one per stage
+        self.by_name: Dict[str, Dict[str, int]] = {}
+
+    def _name_stats(self, name: str) -> Dict[str, int]:
+        s = self.by_name.get(name)
+        if s is None:
+            s = self.by_name[name] = {"compiles": 0, "invocations": 0}
+        return s
 
     def get(self, name: str, fn: Callable, *operands: Any):
         """Return the AOT-compiled executable for ``fn`` at these operand
-        shapes, compiling (and 'predeploying') on first use."""
-        key = (name, tree_signature(operands))
+        shapes, compiling (and 'predeploying') on first use.
+
+        The key includes ``fn`` itself, not just ``name``: plan-built
+        stages (filters, fused chains) are user closures under auto-
+        generated names, and two different predicates that happen to share
+        a name must NOT share an executable.  Stable module-level UDFs
+        still hit across feeds; a freshly-composed chain costs one compile
+        per composition (per shape), never a wrong-function cache hit."""
+        key = (name, fn, tree_signature(operands))
         with self._lock:
             exe = self._cache.get(key)
         if exe is not None:
@@ -64,12 +80,14 @@ class PredeployCache:
             self._cache.setdefault(key, exe)
             self.compiles += 1
             self.compile_s += dt
+            self._name_stats(name)["compiles"] += 1
         return exe
 
     def invoke(self, name: str, fn: Callable, *operands: Any):
         exe = self.get(name, fn, *operands)
         with self._lock:
             self.invocations += 1
+            self._name_stats(name)["invocations"] += 1
         return exe(*operands)
 
     def stats(self) -> Dict[str, float]:

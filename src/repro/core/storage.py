@@ -145,11 +145,15 @@ class StorageJob:
                            for i in range(num_partitions)]
         self.upsert = upsert
         self.stored = 0
+        self.batches = 0         # write() calls — exactly-once fan-out tests
         self.write_s = 0.0
         self._lock = threading.Lock()
 
     def write(self, batch: Dict[str, np.ndarray]) -> int:
-        """Hash-partition one enriched batch by primary key and insert."""
+        """Hash-partition one enriched batch by primary key and insert.
+        The batch may be shared with other sinks of the same plan (tee
+        fan-out): treated as read-only — rows are masked into fresh arrays,
+        never mutated in place."""
         t0 = time.perf_counter()
         npart = len(self.partitions)
         part = (batch["id"] % npart).astype(np.int64)
@@ -163,6 +167,7 @@ class StorageJob:
             stored += self.partitions[p].insert(sub, self.upsert)
         with self._lock:
             self.stored += stored
+            self.batches += 1
             self.write_s += time.perf_counter() - t0
         return stored
 

@@ -1,12 +1,22 @@
-"""The LM data plane: an IDEA feed whose computing jobs tokenize (and
-optionally safety-filter) the incoming stream, with a sink that packs the
-enriched records into dense (B, S) training batches.
+"""The LM data plane: an IDEA ingestion *plan* whose computing jobs
+tokenize (and optionally safety-filter) the incoming stream, with a tee
+sink that packs the enriched records into dense (B, S) training batches.
 
-This is the paper's pipeline doing real work for training: the
-safety-check UDF's SensitiveWords lexicon is *reference data* — upserting a
-keyword mid-training immediately changes which records enter the training
-stream (Model-2 freshness), with zero recompilation (predeployed jobs).
-Adaptive data curation for free.
+This is the paper's pipeline doing real work for training, now built on
+the declarative plan API (core/plan.py):
+
+    pipeline(adapter).parse(...).enrich(UDF2).enrich(tokenize)
+        .filter(safe).tee(packer_sink)[.store(...)]
+
+The safety UDF and the tokenizer fuse into ONE predeployed apply per
+batch; the filter stage clears ``valid`` for flagged records inside that
+same fused executable, so curation costs zero extra dispatches.  The
+safety-check UDF's SensitiveWords lexicon is *reference data* — upserting
+a keyword mid-training immediately changes which records enter the
+training stream (Model-2 freshness), with zero recompilation (predeployed
+jobs).  Adaptive data curation for free.  With ``store_enriched`` the same
+plan tees the enriched stream to the column store as well — training data
+plane and durable enriched dataset from one ingestion pass.
 """
 
 from __future__ import annotations
@@ -17,7 +27,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.core import FeedConfig, FeedManager, SyntheticAdapter
+from repro.core import FeedManager, SyntheticAdapter, pipeline
 from repro.core.enrich import queries as Q
 from repro.data.packing import StreamPacker
 
@@ -32,25 +42,20 @@ class FeedDataSource:
                  safety_filter: bool = False,
                  num_partitions: int = 2,
                  seed: int = 0,
-                 queue_batches: int = 8):
+                 queue_batches: int = 8,
+                 store_enriched: bool = False):
         self.packer = StreamPacker(seq_len, batch_size)
         self._q: "queue.Queue[Optional[Dict]]" = queue.Queue(queue_batches)
         self._packer_lock = threading.Lock()
-        tokenize = Q.make_lm_tokenize(vocab_size)
-        if safety_filter:
-            udf = Q.chain("curated_lm_stream", Q.UDF2, tokenize)
-        else:
-            udf = tokenize
         self.filtered = 0
 
         def sink(batch: Dict[str, np.ndarray]) -> None:
-            keep = batch["valid"]
             if safety_filter:
-                red = batch["safety_check_flag"] != 0
-                self.filtered += int((keep & red).sum())
-                keep = keep & ~red
+                # red rows already have valid=False (filter stage); the
+                # flag column still flows for observability
+                self.filtered += int((batch["safety_check_flag"] != 0).sum())
             with self._packer_lock:
-                for i in np.where(keep)[0]:
+                for i in np.where(batch["valid"])[0]:
                     ids = [int(t) for t in batch["lm_tokens"][i] if t != 0]
                     if not ids:
                         continue
@@ -58,12 +63,20 @@ class FeedDataSource:
                     if out is not None:
                         self._q.put(out)
 
-        cfg = FeedConfig(name=f"lm-data-{seed}", udf=udf,
-                         batch_size=frame_size,
-                         num_partitions=num_partitions, sink=sink)
-        self.handle = manager.start(
-            cfg, SyntheticAdapter(total=total_records,
-                                  frame_size=frame_size, seed=seed))
+        p = (pipeline(SyntheticAdapter(total=total_records,
+                                       frame_size=frame_size, seed=seed),
+                      f"lm-data-{seed}")
+             .parse(batch_size=frame_size)
+             .options(num_partitions=num_partitions))
+        if safety_filter:
+            p.enrich(Q.UDF2)
+        p.enrich(Q.make_lm_tokenize(vocab_size))
+        if safety_filter:
+            p.filter(lambda b: b["safety_check_flag"] == 0, name="safe_only")
+        p.tee(sink, name="lm_data_plane")
+        if store_enriched:
+            p.store()
+        self.handle = manager.submit(p)
         self._drained = False
         threading.Thread(target=self._drain, daemon=True).start()
 

@@ -64,8 +64,10 @@ def test_holder_steal_skips_stop():
 
 def test_feed_end_to_end_enriched_and_complete():
     mgr = make_manager()
+    # coalesce_rows=0: this test does exact invocation/compile accounting,
+    # which the (default-on) backlog coalescer would legitimately change
     cfg = FeedConfig(name="e2e", udf=Q.Q1, batch_size=100,
-                     num_partitions=2)
+                     num_partitions=2, coalesce_rows=0)
     h = mgr.start(cfg, SyntheticAdapter(total=1000, frame_size=100, seed=3))
     stats = h.join(timeout=120)
     assert stats.records_in == 1000
@@ -91,7 +93,7 @@ def test_feed_end_to_end_enriched_and_complete():
 def test_feed_partial_last_batch_padded():
     mgr = make_manager()
     cfg = FeedConfig(name="partial", udf=Q.Q1, batch_size=64,
-                     num_partitions=1)
+                     num_partitions=1, coalesce_rows=0)
     h = mgr.start(cfg, SyntheticAdapter(total=150, frame_size=64))
     stats = h.join(timeout=60)
     assert stats.stored == 150                # 64+64+22 (padded, not lost)
@@ -144,8 +146,9 @@ def test_fault_injection_retry_exactly_once():
             return True
         return False
 
+    # coalesce_rows=0: the hook targets a specific invocation ordinal
     cfg = FeedConfig(name="fault", udf=Q.Q1, batch_size=50,
-                     num_partitions=2, fault_hook=hook)
+                     num_partitions=2, fault_hook=hook, coalesce_rows=0)
     h = mgr.start(cfg, SyntheticAdapter(total=500, frame_size=50))
     stats = h.join(timeout=60)
     assert stats.retries == 1

@@ -1,0 +1,444 @@
+"""Plan-API tests: declarative pipeline compilation (fusion, validation),
+multi-sink fan-out, the FeedConfig shim, and feed-lifecycle fixes.
+
+Deliberately hypothesis-free: CI runs this module in a minimal container
+(`pip install -e . pytest` only) so API regressions surface even where the
+property-test extras are not installed.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputingRunner, ComputingSpec, FeedConfig,
+                        FeedManager, PlanError, RefStore, SyntheticAdapter,
+                        pipeline)
+from repro.core.enrich import queries as Q
+from repro.core.enrich.dispatch import dispatch_mode
+from repro.core.feed import COALESCE_DEFAULT_BATCHES
+from repro.core.intake import Adapter
+from repro.core.records import SyntheticTweets, parse_json_lines
+
+
+def make_manager(scale=0.002):
+    store = RefStore()
+    Q.make_reference_tables(store, scale=scale, seed=7)
+    return FeedManager(store)
+
+
+def scan_by_id(storage):
+    """Storage contents as {id: row dict}, for order-independent compare."""
+    rows = {}
+    for chunk in storage.scan():
+        for i in range(chunk["id"].shape[0]):
+            rows[int(chunk["id"][i])] = {k: chunk[k][i] for k in chunk}
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# fusion: fused chain == sequential stages, at <= half the invocations
+# ---------------------------------------------------------------------------
+
+def test_fused_chain_bitwise_matches_sequential_reference_dispatch():
+    """Runner-level: one fused Q1>Q2 apply produces bit-identical columns
+    to applying Q1 then Q2 as separate computing jobs (reference dispatch,
+    so both sides run the exact same jnp operator implementations)."""
+    mgr = make_manager()
+    frame = SyntheticTweets(seed=21).raw_lines(128)
+    with dispatch_mode("reference"):
+        fused = ComputingRunner(
+            ComputingSpec(Q.Q1.then(Q.Q2), 128), mgr.refstore,
+            mgr.predeploy)
+        out_fused = fused.run(list(frame))
+
+        seq1 = ComputingRunner(ComputingSpec(Q.Q1, 128), mgr.refstore,
+                               mgr.predeploy)
+        seq2 = ComputingRunner(ComputingSpec(Q.Q2, 128), mgr.refstore,
+                               mgr.predeploy)
+        out_seq = seq2.run(seq1.run(list(frame)))
+    for col in ("safety_level", "religious_population"):
+        np.testing.assert_array_equal(out_fused[col], out_seq[col])
+    # the fused runner made ONE invocation where sequential made two
+    assert fused.stats.invocations == 1
+    assert seq1.stats.invocations + seq2.stats.invocations == 2
+
+
+def _run_single_udf_feed(mgr, name, udf, total, frame, seed):
+    cfg = FeedConfig(name=name, udf=udf, batch_size=frame,
+                     num_partitions=1, coalesce_rows=0)
+    h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=frame,
+                                        seed=seed))
+    stats = h.join(timeout=120)
+    return h, stats
+
+
+def test_fused_plan_acceptance_criterion():
+    mgr = make_manager()
+    total, frame = 600, 100
+
+    plan = (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                      seed=5), "fused")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1).enrich(Q.Q2)
+            .store())
+    h_fused = mgr.submit(plan)
+    fused_stats = h_fused.join(timeout=120)
+    assert fused_stats.stored == total
+
+    h_q1, s_q1 = _run_single_udf_feed(mgr, "seq-q1", Q.Q1, total, frame, 5)
+    h_q2, s_q2 = _run_single_udf_feed(mgr, "seq-q2", Q.Q2, total, frame, 5)
+
+    # <= half the computing-job invocations of the two sequential feeds
+    seq_inv = s_q1.computing.invocations + s_q2.computing.invocations
+    assert fused_stats.computing.invocations * 2 <= seq_inv
+
+    fused_rows = scan_by_id(h_fused.storage)
+    q1_rows = scan_by_id(h_q1.storage)
+    q2_rows = scan_by_id(h_q2.storage)
+    assert set(fused_rows) == set(q1_rows) == set(q2_rows)
+    for rid, row in fused_rows.items():
+        np.testing.assert_array_equal(row["safety_level"],
+                                      q1_rows[rid]["safety_level"])
+        np.testing.assert_array_equal(row["religious_population"],
+                                      q2_rows[rid]["religious_population"])
+
+    # per-stage observability: both stages were invoked per batch
+    per = fused_stats.computing.per_stage
+    assert per["q1_safety_level"].invocations == \
+        fused_stats.computing.invocations
+    assert per["q2_religious_population"].state_builds >= 1
+
+
+def test_per_stage_state_reuse_version_gated():
+    """refresh="version": each fused stage's state is rebuilt only when a
+    table THAT stage reads changes; quiet stages reuse."""
+    mgr = make_manager()
+    plan = (pipeline(SyntheticAdapter(total=500, frame_size=100, seed=9),
+                     "gated")
+            .parse(batch_size=100, refresh="version")
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q2).enrich(Q.Q3)
+            .store())
+    stats = mgr.submit(plan).join(timeout=120)
+    per = stats.computing.per_stage
+    for stage in ("q2_religious_population", "q3_largest_religions"):
+        assert per[stage].state_builds == 1          # built once...
+        assert per[stage].state_reuses >= 1          # ...then reused
+
+
+# ---------------------------------------------------------------------------
+# multi-sink fan-out
+# ---------------------------------------------------------------------------
+
+def test_tee_delivers_every_batch_to_every_sink_exactly_once():
+    mgr = make_manager()
+    lock = threading.Lock()
+    got = {"a": [], "b": []}
+
+    def make_sink(key):
+        def sink(batch):
+            with lock:
+                got[key].append(batch)
+        return sink
+
+    plan = (pipeline(SyntheticAdapter(total=400, frame_size=50, seed=4),
+                     "tee")
+            .parse(batch_size=50)
+            .options(num_partitions=2, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .tee(make_sink("a"), name="a")
+            .tee(make_sink("b"), name="b")
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+
+    inv = stats.computing.invocations
+    assert stats.sink_batches == {"a": inv, "b": inv, "store": inv}
+    assert h.storage.batches == inv
+    for key in ("a", "b"):
+        ids = np.concatenate(
+            [b["id"][b["valid"]] for b in got[key]])
+        assert len(ids) == 400                       # every record...
+        assert len(np.unique(ids)) == 400            # ...exactly once
+    assert stats.stored == 400                       # storage sink too
+
+
+def test_failing_tee_sink_surfaces_error_instead_of_deadlocking():
+    """A tee consumer that raises must not wedge the feed: its holder
+    fail-fast closes (unblocking producers), healthy sinks keep receiving,
+    and join() re-raises the sink's error."""
+    mgr = make_manager()
+
+    def bad_sink(batch):
+        raise RuntimeError("sink exploded")
+
+    plan = (pipeline(SyntheticAdapter(total=400, frame_size=50, seed=6),
+                     "badsink")
+            .parse(batch_size=50)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .tee(bad_sink, name="bad")
+            .store())
+    h = mgr.submit(plan)
+    with pytest.raises(RuntimeError, match="sink exploded"):
+        h.join(timeout=30)
+    # the healthy storage sink still got every record
+    assert h.storage.stored == 400
+
+
+def test_all_sinks_dead_winds_feed_down_promptly():
+    """If a feed's ONLY sink dies, workers stop enriching (discard-drain),
+    the adapter is stopped, and join() surfaces the sink error — instead
+    of silently burning the rest of a (possibly unbounded) stream."""
+    mgr = make_manager()
+
+    def bad_sink(batch):
+        raise RuntimeError("only sink exploded")
+
+    plan = (pipeline(SyntheticAdapter(total=10_000_000, frame_size=50,
+                                      seed=7), "allsinksdead")
+            .parse(batch_size=50)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .tee(bad_sink, name="only"))
+    h = mgr.submit(plan)
+    with pytest.raises(RuntimeError, match="only sink exploded"):
+        h.join(timeout=60)
+    assert h.adapter._stop.is_set()
+    # the feed aborted long before the 10M-record stream was enriched
+    assert sum(r.stats.invocations for r in h.runners) < 100
+
+
+def test_same_shaped_plans_with_different_predicates_do_not_collide():
+    """Two plans whose auto-generated stage names line up must each run
+    their OWN compiled predicate (the predeploy cache keys on function
+    identity, not just name + shapes)."""
+    mgr = make_manager()
+
+    def plan_with_threshold(name, thr):
+        return (pipeline(SyntheticAdapter(total=200, frame_size=50,
+                                          seed=12), name)
+                .parse(batch_size=50)
+                .options(num_partitions=1, coalesce_rows=0)
+                .enrich(Q.Q1)
+                .filter(lambda b: b["country"] >= thr)  # default stage name
+                .store())
+
+    h_all = mgr.submit(plan_with_threshold("keep-all", 0))
+    assert h_all.join(timeout=120).stored == 200
+    h_none = mgr.submit(plan_with_threshold("keep-none", 10_000))
+    assert h_none.join(timeout=120).stored == 0
+
+
+def test_filter_stage_fuses_and_drops_rows():
+    mgr = make_manager()
+    plan = (pipeline(SyntheticAdapter(total=500, frame_size=100, seed=8),
+                     "filtered")
+            .parse(batch_size=100)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .filter(lambda b: b["country"] < 128, name="low_country")
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+    # ground truth from the deterministic source (same frame batching —
+    # the RNG stream position depends on it)
+    src = SyntheticTweets(seed=8)
+    expected = sum(int((parse_json_lines(f)["country"] < 128).sum())
+                   for f in src.batches(500, 100))
+    assert stats.stored == expected
+    for rid, row in scan_by_id(h.storage).items():
+        assert int(row["country"]) < 128
+    # the filter fused into the enrich chain: still one apply per batch
+    by_name = {k: v for k, v in mgr.predeploy.by_name.items()
+               if k.startswith("apply:")}
+    assert len(by_name) == 1
+    assert stats.computing.invocations == 5
+
+
+def test_project_restricts_sink_columns():
+    mgr = make_manager()
+    plan = (pipeline(SyntheticAdapter(total=200, frame_size=100, seed=2),
+                     "proj")
+            .parse(batch_size=100)
+            .options(num_partitions=1)
+            .enrich(Q.Q1)
+            .project("safety_level")
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+    assert stats.stored == 200
+    for chunk in h.storage.scan():
+        assert sorted(chunk) == ["id", "safety_level", "valid"]
+
+
+# ---------------------------------------------------------------------------
+# compile-time validation
+# ---------------------------------------------------------------------------
+
+def _adapter(n=10):
+    return SyntheticAdapter(total=n, frame_size=n)
+
+
+def test_missing_ref_table_raises_at_compile_time():
+    empty = RefStore()
+    p = pipeline(_adapter(), "bad").enrich(Q.Q1).store()
+    with pytest.raises(PlanError, match="safety_levels"):
+        p.compile(empty)
+    # ...and nothing was started or registered
+    mgr = FeedManager(empty)
+    with pytest.raises(PlanError):
+        mgr.submit(pipeline(_adapter(), "bad").enrich(Q.Q1).store())
+    assert mgr.feeds == {}
+
+
+def test_enrich_after_store_raises_at_compile_time():
+    mgr = make_manager()
+    p = pipeline(_adapter(), "bad2").store().enrich(Q.Q1)
+    with pytest.raises(PlanError, match="after a sink"):
+        p.compile(mgr.refstore)
+
+
+def test_plan_without_sink_raises():
+    mgr = make_manager()
+    with pytest.raises(PlanError, match="no sink"):
+        pipeline(_adapter(), "nosink").enrich(Q.Q1).compile(mgr.refstore)
+
+
+def test_double_store_and_double_project_raise():
+    mgr = make_manager()
+    with pytest.raises(PlanError, match="store"):
+        pipeline(_adapter(), "p1").store().store().compile(mgr.refstore)
+    with pytest.raises(PlanError, match="project"):
+        (pipeline(_adapter(), "p2").project("id").project("country")
+         .store().compile(mgr.refstore))
+
+
+def test_unknown_project_column_raises_at_compile_time():
+    mgr = make_manager()
+    p = (pipeline(_adapter(), "p3").enrich(Q.Q1)
+         .project("not_a_column").store())
+    with pytest.raises(PlanError, match="not_a_column"):
+        p.compile(mgr.refstore)
+
+
+def test_stage_dtype_validation_at_compile_time():
+    """A UDF that reads a column the schema does not have fails in
+    compile(), not in a worker thread mid-feed."""
+    def bad_apply(batch, state, refs):
+        return {"x": batch["no_such_column"] + 1}
+
+    bad = Q.EnrichUDF("bad_udf", (), None, bad_apply, "broken")
+    mgr = make_manager()
+    p = pipeline(_adapter(), "p4").enrich(Q.Q1).enrich(bad).store()
+    with pytest.raises(PlanError, match="bad_udf"):
+        p.compile(mgr.refstore)
+
+
+def test_non_batch_aligned_output_raises_at_compile_time():
+    def scalarizing(batch, state, refs):
+        return {"x": batch["country"].sum()}          # rank-0 output
+
+    bad = Q.EnrichUDF("scalarizing", (), None, scalarizing, "broken")
+    mgr = make_manager()
+    with pytest.raises(PlanError, match="batch-aligned"):
+        (pipeline(_adapter(), "p5").enrich(bad).store()
+         .compile(mgr.refstore))
+
+
+def test_unknown_option_raises():
+    with pytest.raises(PlanError, match="unknown option"):
+        pipeline(_adapter(), "p6").options(frobnicate=1)
+
+
+# ---------------------------------------------------------------------------
+# FeedConfig shim + feed lifecycle
+# ---------------------------------------------------------------------------
+
+def test_feedconfig_shim_lowers_to_one_stage_plan():
+    mgr = make_manager()
+    cfg = FeedConfig(name="shim", udf=Q.Q1, batch_size=100,
+                     num_partitions=2)
+    h = mgr.start(cfg, SyntheticAdapter(total=300, frame_size=100, seed=1))
+    assert h.plan is not None
+    assert h.plan.stage_names == ("q1_safety_level",)
+    assert [s.name for s in h.plan.sinks] == ["store"]
+    stats = h.join(timeout=120)
+    assert stats.stored == 300
+
+
+def test_feed_name_reusable_after_join():
+    """Completed feeds deregister: same name + holder IDs start cleanly."""
+    mgr = make_manager()
+    for round_ in range(2):
+        cfg = FeedConfig(name="again", udf=Q.Q1, batch_size=50,
+                         num_partitions=2)
+        h = mgr.start(cfg, SyntheticAdapter(total=200, frame_size=50,
+                                            seed=round_))
+        stats = h.join(timeout=120)
+        assert stats.stored == 200
+    assert "again" not in mgr.feeds
+    assert mgr.holder_manager.partitions("again:intake") == []
+
+
+def test_feed_name_reusable_after_stop():
+    mgr = make_manager()
+    for round_ in range(2):
+        cfg = FeedConfig(name="stopper", udf=None, batch_size=50)
+        adapter = SyntheticAdapter(total=100_000, frame_size=50,
+                                   rate=20_000.0)
+        h = mgr.start(cfg, adapter)
+        h.stop()
+        stats = h.join(timeout=60)
+        assert stats.stored == stats.records_in
+
+
+class DictFrameAdapter(Adapter):
+    """Yields pre-parsed tensor frames (dict-of-columns), as a balanced
+    intake would."""
+
+    def __init__(self, total, frame_size, seed=0):
+        super().__init__()
+        self.total, self.frame_size = total, frame_size
+        self.src = SyntheticTweets(seed=seed)
+
+    def frames(self):
+        for f in self.src.batches(self.total, self.frame_size):
+            if self._stop.is_set():
+                return
+            yield parse_json_lines(f)
+
+
+def test_insert_baseline_counts_rows_not_columns_for_dict_frames():
+    mgr = make_manager()
+    cfg = FeedConfig(name="ins-dict", udf=Q.Q1, batch_size=50,
+                     framework="insert")
+    h = mgr.start(cfg, DictFrameAdapter(total=150, frame_size=50))
+    stats = h.join(timeout=120)
+    assert stats.stored == 150
+    assert stats.records_in == 150        # was 8 per frame (column count)
+    assert stats.frames_in == 3
+
+
+def test_intake_counts_rows_for_dict_frames():
+    mgr = make_manager()
+    cfg = FeedConfig(name="new-dict", udf=Q.Q1, batch_size=50,
+                     num_partitions=1)
+    h = mgr.start(cfg, DictFrameAdapter(total=150, frame_size=50))
+    stats = h.join(timeout=120)
+    assert stats.records_in == 150
+    assert stats.stored == 150
+
+
+def test_coalesce_rows_default_resolution():
+    new = FeedConfig(name="a", batch_size=100)
+    assert new.resolved_coalesce_rows == COALESCE_DEFAULT_BATCHES * 100
+    assert FeedConfig(name="b", batch_size=100,
+                      coalesce_rows=7).resolved_coalesce_rows == 7
+    assert FeedConfig(name="c", batch_size=100,
+                      coalesce_rows=0).resolved_coalesce_rows == 0
+    for baseline in ("current", "balanced", "insert"):
+        assert FeedConfig(name="d", batch_size=100,
+                          framework=baseline).resolved_coalesce_rows == 0
