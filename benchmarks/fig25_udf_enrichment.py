@@ -27,6 +27,12 @@ enrichments as three sequential single-UDF feeds — the chaining win the
 plan API exists for.  Plus a sustained-backlog section measuring the
 default-on worker coalescer (coalesce_rows auto vs 0) against a replayed
 pre-generated stream, so intake always outruns computing.
+
+Elastic axis (``--elastic``): a bursty square-wave stream (low/high rec/s
+phases around the calibrated single-partition capacity) under static-low,
+static-high, and controller-driven parallelism (core/elasticity.py) —
+rec/s, p95 sampled backlog, and worker-seconds per config, plus the
+elastic-vs-best-static ratio the acceptance criterion reads.
 """
 
 from __future__ import annotations
@@ -41,8 +47,8 @@ import numpy as np
 from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
                                add_dispatch_arg, emit, make_manager,
                                run_feed, set_dispatch)
-from repro.core import (ComputingRunner, ComputingSpec, FeedConfig,
-                        SyntheticAdapter, pipeline)
+from repro.core import (ComputingRunner, ComputingSpec, ElasticSpec,
+                        FeedConfig, SyntheticAdapter, pipeline)
 from repro.core.enrich import dispatch as D
 from repro.core.enrich import ops
 from repro.core.intake import Adapter
@@ -176,6 +182,100 @@ def bench_chained_plan(mgr, total: int, batch: int = BATCH_1X) -> None:
          f"per-stage state_builds={builds}")
 
 
+class BurstyAdapter(Adapter):
+    """Square-wave rate: pre-generated frames released at alternating
+    low/high records-per-second phases — the load shape the elasticity
+    controller exists for (ride the burst up, ride the quiet down)."""
+
+    def __init__(self, frames, low_rate: float, high_rate: float,
+                 period_s: float):
+        super().__init__()
+        self._frames = frames
+        self.low, self.high, self.period = low_rate, high_rate, period_s
+
+    def frames(self):
+        t0 = time.perf_counter()
+        vt = 0.0                       # virtual release clock
+        for f in self._frames:
+            if self._stop.is_set():
+                return
+            rate = self.high if int(vt / self.period) % 2 else self.low
+            vt += len(f) / rate
+            delay = t0 + vt - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            yield f
+
+
+def bench_elastic(mgr, batch: int = BATCH_1X) -> None:
+    """--elastic: a bursty (square-wave) stream under three parallelism
+    policies — static low (1 partition), static high (4), and the
+    elasticity controller (1..3, backlog-driven).  Reports rec/s, p95
+    sampled backlog, and worker-seconds (live-worker integral: the cost an
+    operator pays for headroom).  coalesce_rows=0 on every side so
+    partition count is the only lever.  On this 2-core container thread
+    parallelism is nearly flat (XLA CPU fans one dispatch over both
+    cores), so the elastic win is on the COST axis: static-low throughput
+    at a fraction of static-high's worker-seconds; on real multi-core
+    nodes the throughput axis separates too."""
+    # calibrate the single-partition steady-state capacity (warm + steady)
+    cal = list(SyntheticTweets(seed=29).batches(24 * batch, batch))
+    for name in ("elastic-cal-warm", "elastic-cal"):
+        p = (pipeline(ReplayAdapter(cal), name).parse(batch_size=batch)
+             .options(num_partitions=1, coalesce_rows=0, holder_capacity=16)
+             .enrich(Q.Q1).store())
+        s = mgr.submit(p).join(timeout=1200)
+    cap = s.records_per_s
+    emit(FIG, "bursty_capacity_1p", cap, "rec/s",
+         "calibrated single-partition Q1 capacity for the square wave")
+
+    # high phase overloads one partition by 1.2x, but the AVERAGE load
+    # stays well under the scaled-up aggregate capacity — the burst's
+    # backlog drains within each low phase, leaving an idle window, so the
+    # controller must ride DOWN as well as up every cycle (sustained
+    # overload, where staying scaled-up is the right call, is what the
+    # coalescer A/B above measures)
+    low, high, period, phases = 0.05 * cap, 1.2 * cap, 0.8, 8
+    total = int(period * (phases / 2) * (low + high))
+    total -= total % batch
+    stream = list(SyntheticTweets(seed=37).batches(total, batch))
+
+    configs = (
+        ("static_lo", 1, ElasticSpec(min_partitions=1, max_partitions=1)),
+        ("static_hi", 4, ElasticSpec(min_partitions=4, max_partitions=4)),
+        ("elastic", 1, ElasticSpec(min_partitions=1, max_partitions=3,
+                                   interval_s=0.02, high_watermark=1.0,
+                                   low_watermark=1.5, up_after=2,
+                                   down_after=6, cooldown_s=0.15)),
+    )
+    results = {}
+    for label, n, spec in configs:
+        p = (pipeline(BurstyAdapter(stream, low, high, period),
+                      f"bursty-{label}")
+             .parse(batch_size=batch)
+             .options(num_partitions=n, coalesce_rows=0,
+                      holder_capacity=16, elastic=spec)
+             .enrich(Q.Q1).store())
+        s = mgr.submit(p).join(timeout=1200)
+        assert s.stored == total, (label, s.stored, total)
+        results[label] = s
+        peak = s.peak_partitions.get("q1_safety_level", n)
+        emit(FIG, f"bursty_{label}", s.records_per_s, "rec/s",
+             f"square wave {low:.0f}/{high:.0f} rec/s x{total} rows; "
+             f"p95_backlog={s.backlog_p95_rows:.0f} rows "
+             f"worker_s={s.worker_seconds:.2f} "
+             f"scale_ups={s.scale_ups} scale_downs={s.scale_downs} "
+             f"peak_partitions={peak}")
+    best_static = max(results["static_lo"].records_per_s,
+                      results["static_hi"].records_per_s)
+    e = results["elastic"]
+    emit(FIG, "bursty_elastic_vs_best_static",
+         e.records_per_s / best_static, "ratio",
+         f"acceptance: >= 0.9 of best static AND "
+         f"worker_s {e.worker_seconds:.2f} < static_hi "
+         f"{results['static_hi'].worker_seconds:.2f}")
+
+
 def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
                              ) -> None:
     """Default-on coalescer under sustained backlog: auto (4x batch) vs
@@ -201,7 +301,8 @@ def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
 
 
 def main(total: int = 8_000, dispatch: str = "auto",
-         probe_rows: int = 1_000_000, plan: str = "chained") -> None:
+         probe_rows: int = 1_000_000, plan: str = "chained",
+         elastic: bool = False) -> None:
     set_dispatch(dispatch)
     tag = f"[dispatch={dispatch}]"
 
@@ -264,6 +365,8 @@ def main(total: int = 8_000, dispatch: str = "auto",
     if plan == "chained":
         bench_chained_plan(mgr, total)
         bench_backlog_coalescing(mgr, total)
+    if elastic:
+        bench_elastic(mgr)
 
 
 if __name__ == "__main__":
@@ -277,5 +380,10 @@ if __name__ == "__main__":
                     default="chained",
                     help="chained: fused Q1->Q2->Q3 IngestPlan vs three "
                          "sequential feeds + backlog-coalescing A/B")
+    ap.add_argument("--elastic", action="store_true",
+                    help="bursty square-wave stream: static low/high "
+                         "partitions vs the elasticity controller "
+                         "(rec/s, p95 backlog, worker-seconds)")
     args = ap.parse_args()
-    main(args.total, args.dispatch, args.probe_rows, args.plan)
+    main(args.total, args.dispatch, args.probe_rows, args.plan,
+         args.elastic)

@@ -1,5 +1,5 @@
-"""Declarative plan-API quickstart: chained enrichment, filter, projection
-and multi-sink fan-out in one ingestion pass.
+"""Declarative plan-API quickstart: chained enrichment, filter, projection,
+multi-sink fan-out, and per-stage elasticity in one ingestion pass.
 
 The SQL++ this models (paper Figures 8/12, extended):
 
@@ -10,6 +10,12 @@ The SQL++ this models (paper Figures 8/12, extended):
         SELECT safety_level, religious_population;        -- project
     -- plus a second consumer of the same enriched stream (tee)
 
+Elasticity (core/elasticity.py): ``.enrich(udf, partitions=..., elastic=
+ElasticSpec(...))`` makes that stage its own **stage group** — its own
+holder + worker pool, scaled between min/max partitions by a backlog-
+sampling controller, independently of the rest of the chain.  A feed-wide
+default goes on ``options(elastic=...)``.
+
 Run:  PYTHONPATH=src python examples/pipeline_quickstart.py
 
 (examples/quickstart.py shows the pre-plan FeedConfig shim.)
@@ -19,7 +25,8 @@ import threading
 
 import numpy as np
 
-from repro.core import FeedManager, RefStore, SyntheticAdapter, pipeline
+from repro.core import (ElasticSpec, FeedManager, RefStore,
+                        SyntheticAdapter, pipeline)
 from repro.core.enrich import queries as Q
 
 # 1. reference data at (scaled-down) paper cardinalities
@@ -38,22 +45,29 @@ def monitor(batch):
         tee_rows[0] += int(batch["valid"].sum())
 
 
-# 3. the declarative plan: parse -> Q1 -> Q2 (FUSED: one predeployed apply
-#    per batch, union of both reference tables) -> filter -> project ->
-#    fan out to the monitor AND the column store, exactly once each
+# 3. the declarative plan: parse -> Q1 (cheap probe, static) -> Q2 + filter
+#    (its own stage group: declared partitions + elastic bounds, so the
+#    controller scales THIS stage's workers with its backlog while Q1's
+#    pool stays put) -> project -> fan out to the monitor AND the column
+#    store, exactly once each.  Stages without their own declaration fuse
+#    into the preceding group (the filter rides with Q2's workers).
 plan = (pipeline(SyntheticAdapter(total=20_000, frame_size=420, seed=1),
                  "TweetPipeline")
         .parse(batch_size=420)
-        .options(num_partitions=2)
+        .options(num_partitions=1)
         .enrich(Q.Q1)
-        .enrich(Q.Q2)
+        .enrich(Q.Q2, partitions=1,
+                elastic=ElasticSpec(min_partitions=1, max_partitions=2,
+                                    interval_s=0.02, up_after=1,
+                                    cooldown_s=0.1))
         .filter(lambda b: b["safety_level"] >= 3, name="safe_enough")
         .project("safety_level", "religious_population")
         .tee(monitor, name="monitor")
         .store())
 
 # compile-time validation: missing ref tables, dtype mismatches, stages
-# after sinks, unknown projected columns -> PlanError HERE, not mid-feed
+# after sinks, unknown projected columns, partitions outside elastic
+# bounds -> PlanError HERE, not mid-feed
 feed = mgr.submit(plan)
 stats = feed.join()
 
@@ -64,8 +78,12 @@ print(f"ingested={stats.records_in} stored={stats.stored} "
       f"(filter dropped {stats.records_in - stats.stored})")
 print(f"sink deliveries={stats.sink_batches} tee_rows={tee_rows[0]}")
 print(f"stored columns={stored_cols}")
-print(f"computing jobs={stats.computing.invocations} "
-      f"(ONE fused apply per batch; per-stage state_builds={builds})")
+print(f"stage groups={[g.name for g in feed.plan.stage_groups]} "
+      f"(per-stage state_builds={builds})")
+print(f"elasticity: peak_partitions={stats.peak_partitions} "
+      f"scale_ups={stats.scale_ups} scale_downs={stats.scale_downs} "
+      f"worker_seconds={stats.worker_seconds:.2f} "
+      f"p95_backlog={stats.backlog_p95_rows:.0f} rows")
 print(f"throughput={stats.records_per_s:,.0f} records/s "
       f"compiles={stats.predeploy['compiles']}")
 assert stats.stored == tee_rows[0]          # both sinks saw the same rows

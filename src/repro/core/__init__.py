@@ -8,12 +8,17 @@ from repro.core.computing import (  # noqa: F401
     ComputingSpec,
     ComputingStats,
 )
+from repro.core.elasticity import (  # noqa: F401
+    ElasticityController,
+    ElasticSpec,
+)
 from repro.core.feed import FeedConfig, FeedHandle, FeedManager  # noqa: F401
 from repro.core.plan import (  # noqa: F401
     IngestPlan,
     Pipeline,
     PlanError,
     SinkSpec,
+    StageGroup,
     StoreSpec,
     pipeline,
 )

@@ -43,13 +43,16 @@ from repro.core.refdata import RefSnapshot, RefStore
 class StageStats:
     """Per-stage observability for fused (chained) UDFs: how often each
     stage's intermediate state was rebuilt vs reused and what it cost.
-    Apply time cannot be attributed per stage — the whole chain is ONE
-    fused executable by design — so only the state side is split."""
+    Inside a multi-stage fused executable apply time cannot be attributed
+    per stage — the whole chain is ONE dispatch by design — so ``apply_s``
+    is populated only when the executable holds a single stage, which is
+    exactly the per-stage-split case the elasticity controller samples."""
     invocations: int = 0
     records: int = 0
     state_builds: int = 0
     state_reuses: int = 0
     state_s: float = 0.0
+    apply_s: float = 0.0
 
     def merge(self, other: "StageStats") -> None:
         for f in dataclasses.fields(self):
@@ -268,10 +271,14 @@ class ComputingRunner:
         self.stats.convert_s += time.perf_counter() - t0
         self.stats.invocations += 1
         self.stats.records += nvalid
-        for st in (udf.stages or (udf,)):
+        stages = udf.stages or (udf,)
+        for st in stages:
             ss = self.stats.stage(st.name)
             ss.invocations += 1
             ss.records += nvalid
+        if len(stages) == 1:
+            # single-stage executable: the whole apply IS this stage
+            self.stats.stage(stages[0].name).apply_s = self.stats.apply_s
         return out
 
     def _run_per_record(self, dev_batch, refs, versions):

@@ -45,8 +45,21 @@ rigs, not plans):
 Fault tolerance: per-invocation retry with exponential backoff; failed
 frames are re-enqueued (at-least-once) and the idempotent storage job makes
 delivery effectively exactly-once.  Idle workers steal from the deepest
-holder (straggler mitigation).  ``FeedHandle.scale_up`` adds computing
-partitions mid-feed (elasticity — the round-robin partitioner re-targets).
+holder (straggler mitigation).
+
+**Per-stage elasticity** (core/elasticity.py): a compiled plan is >= 1
+linked **stage groups** — chain segments split at declared boundaries
+(``.enrich(q6, partitions=..., elastic=...)``), each with its own holder
+list + worker pool + elastic bounds, connected by intermediate
+``PartitionHolder``s so a heavy-state stage (Q6) scales independently of
+cheap probe stages.  ``FeedHandle.scale_up(n, stage=g)`` adds partitions
+mid-feed (the upstream round-robin re-targets); ``scale_down`` retires
+them — the holder leaves the round-robin under the handle lock, a
+StopRecord drains its queue exactly-once, and the worker merges its
+``ComputingStats`` into the feed totals as it exits.  With
+``options(elastic=...)`` an ``ElasticityController`` thread closes the
+loop from observed backlog (rows + bytes queued per group) to partition
+count between ``min_partitions``/``max_partitions``.
 
 Cross-partition micro-batching (``coalesce_rows``): when a worker finds
 a backlog in its holder it coalesces queued frames — up to a row AND byte
@@ -74,13 +87,15 @@ import numpy as np
 from repro.core import records
 from repro.core.computing import ComputingRunner, ComputingSpec, \
     ComputingStats
+from repro.core.elasticity import ElasticityController, ElasticSpec
 from repro.core.enrich.queries import EnrichUDF
 from repro.core.intake import Adapter, IntakeJob
 from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
                                          PartitionHolderManager, STOP,
-                                         StopRecord)
-from repro.core.plan import IngestPlan, Pipeline, pipeline
+                                         StopRecord, frame_bytes,
+                                         frame_rows)
+from repro.core.plan import IngestPlan, Pipeline, StageGroup, pipeline
 from repro.core.predeploy import PredeployCache
 from repro.core.refdata import RefStore
 from repro.core.storage import StorageJob
@@ -90,17 +105,8 @@ from repro.core.storage import StorageJob
 # numbers in CHANGES.md PR 2)
 COALESCE_DEFAULT_BATCHES = 4
 
-
-def _frame_rows(frame) -> int:
-    if isinstance(frame, dict):
-        return records.batch_rows(frame)
-    return len(frame)
-
-
-def _frame_bytes(frame) -> int:
-    if isinstance(frame, dict):
-        return sum(v.nbytes for v in frame.values())
-    return sum(len(line) for line in frame)
+_frame_rows = frame_rows      # shared with the holders' backlog accounting
+_frame_bytes = frame_bytes
 
 
 @dataclasses.dataclass
@@ -140,6 +146,9 @@ class FeedConfig:
     # storage job (the LM data plane consumes batches directly — see
     # train/data_feed.py)
     sink: Optional[Callable[[Dict], None]] = None
+    # feed-wide elastic bounds (shim lowering of options(elastic=...));
+    # per-stage bounds are plan-only
+    elastic: Optional[ElasticSpec] = None
 
     @property
     def resolved_coalesce_rows(self) -> int:
@@ -166,10 +175,57 @@ class FeedStats:
     # multi-sink fan-out: sink name -> batches delivered (exactly-once per
     # sink per enriched batch)
     sink_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # elasticity: partition add/retire events (manual + controller), the
+    # integral of live computing workers over time (the cost side of the
+    # elastic-vs-static A/B), and per-group peak partition counts
+    scale_ups: int = 0
+    scale_downs: int = 0
+    worker_seconds: float = 0.0
+    backlog_p95_rows: float = 0.0
+    peak_partitions: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def records_per_s(self) -> float:
         return self.records_in / self.wall_s if self.wall_s else 0.0
+
+
+class _WorkerSlot:
+    """One computing worker: its holder, thread-confined runner, thread,
+    and retirement flag (scale_down sets it; the worker then drains its
+    queue, merges its stats, and exits without stealing)."""
+    __slots__ = ("pid", "holder", "runner", "thread", "retire", "t_start")
+
+    def __init__(self, pid: int, holder: PartitionHolder,
+                 runner: ComputingRunner):
+        self.pid = pid
+        self.holder = holder
+        self.runner = runner
+        self.thread: Optional[threading.Thread] = None
+        self.retire = threading.Event()
+        self.t_start = time.perf_counter()
+
+
+class _StageGroupRuntime:
+    """Runtime state of one compiled ``StageGroup``: its own holder list
+    (round-robin target of the upstream job), worker pool, computing spec
+    derived from the plan, and elastic bounds.  All mutation happens under
+    the feed handle's lock."""
+
+    def __init__(self, gid: int, name: str, job: str, spec: ComputingSpec,
+                 elastic: Optional[ElasticSpec]):
+        self.gid = gid
+        self.name = name
+        self.job = job              # holder-manager job name (stealing)
+        self.spec = spec
+        self.elastic = elastic
+        self.holders: List[PartitionHolder] = []   # live, lock-guarded
+        self.slots: List[_WorkerSlot] = []
+        self.next: Optional["_StageGroupRuntime"] = None
+        self.next_pid = 0           # monotonic: retired pids never reused
+        self.live = 0
+        self.rr = 0                 # round-robin cursor into next.holders
+        self.closing = False        # upstream drained: no more scale-ups
+        self.peak_partitions = 0
 
 
 class FeedHandle:
@@ -184,6 +240,10 @@ class FeedHandle:
         self.holders: List[PartitionHolder] = []
         self.workers: List[threading.Thread] = []
         self.runners: List[ComputingRunner] = []
+        # decoupled path: >= 1 linked stage groups (per-stage parallelism);
+        # empty for the coupled/insert baselines
+        self.stage_groups: List[_StageGroupRuntime] = []
+        self.controller: Optional[ElasticityController] = None
         # one active holder per sink (plan fan-out); storage_holder aliases
         # the first for pre-plan call sites
         self.sink_holders: List[ActivePartitionHolder] = []
@@ -198,6 +258,9 @@ class FeedHandle:
         self._finalized = False
         self._deregistered = False
         self._sinks_dead = False    # all sink consumers failed: discard
+        # ComputingStats of workers retired by scale_down, merged here the
+        # moment the worker exits so no invocation/record count can vanish
+        self._retired_computing = ComputingStats()
 
     # ------------------------------------------------------------- lifecycle
     def stop(self) -> None:
@@ -208,8 +271,11 @@ class FeedHandle:
     def join(self, timeout: Optional[float] = None) -> FeedStats:
         if self.intake is not None:
             self.intake.join(timeout)
-        for w in self.workers:
-            w.join(timeout)
+        for w in self.workers:     # the list may grow while we iterate
+            w.join(timeout)        # (scale_up); appended threads are seen
+        if self.controller is not None:
+            self.controller.stop()
+            self.controller.join(timeout)
         try:
             if not self._finalized:
                 for sh in self.sink_holders:
@@ -245,8 +311,20 @@ class FeedHandle:
         if self.storage is not None:
             self.stats.stored = self.storage.stored
             self.stats.storage_write_s = self.storage.write_s
+        # retired workers merged their runners at exit (scale_down); the
+        # runners list holds only never-retired workers at this point
+        self.stats.computing.merge(self._retired_computing)
         for r in self.runners:
             self.stats.computing.merge(r.stats)
+        for g in self.stage_groups:
+            self.stats.peak_partitions[g.name] = g.peak_partitions
+        if self.controller is not None:
+            # worst sampled backlog across ALL stage groups — for plans
+            # whose elastic group is a later stage, group 0's (static)
+            # backlog would describe the wrong pool
+            self.stats.backlog_p95_rows = max(
+                (self.controller.backlog_p95(g.gid)
+                 for g in self.stage_groups), default=0.0)
         for name, sh in zip(self._sink_names, self.sink_holders):
             self.stats.sink_batches[name] = sh.pulled
         self.stats.predeploy = self.manager.predeploy.stats()
@@ -264,36 +342,97 @@ class FeedHandle:
             return
         self._deregistered = True
         hm = self.manager.holder_manager
-        for h in self.holders + self.sink_holders:
+        all_holders: List[PartitionHolder] = list(self.sink_holders)
+        if self.stage_groups:
+            for g in self.stage_groups:   # retired holders already
+                all_holders.extend(g.holders)  # unregistered at retire time
+        else:
+            all_holders.extend(self.holders)
+        for h in all_holders:
             hm.unregister(h.holder_id)
         if self.manager.feeds.get(self.cfg.name) is self:
             del self.manager.feeds[self.cfg.name]
 
     # ------------------------------------------------------------ elasticity
-    def scale_up(self, extra_partitions: int) -> None:
-        """Add computing partitions mid-feed; the intake round-robin picks
-        them up on the next frame."""
-        base = len(self.holders)
-        for i in range(extra_partitions):
-            pid = base + i
-            holder = PartitionHolder((f"{self.cfg.name}:intake", pid),
-                                     self.cfg.holder_capacity)
-            self.manager.holder_manager.register(holder)
-            self.holders.append(holder)
-            self._spawn_worker(pid, holder)
+    def scale_up(self, extra_partitions: int, stage: int = 0) -> int:
+        """Add computing partitions to one stage group mid-feed; the
+        upstream round-robin (the intake for group 0, the previous group's
+        workers otherwise) picks them up on the next frame.  The new
+        workers run the SAME compiled spec the group's original workers
+        got — derived from the plan's stage group, never re-derived from
+        the FeedConfig shim (a shim-era ``cfg.udf`` spec would enrich with
+        the wrong pipeline on plan-submitted feeds).  Returns the number
+        actually added (0 once the upstream has drained — a late worker
+        would miss its StopRecord and never exit)."""
+        group = self._group(stage)
+        added = 0
+        for _ in range(extra_partitions):
+            with self._lock:
+                if group.closing or (group.gid == 0 and
+                                     self.intake is not None and
+                                     self.intake.closing):
+                    break
+                self._add_partition_locked(group)
+                self.stats.scale_ups += 1
+                added += 1
+        return added
 
-    def _spawn_worker(self, pid: int, holder: PartitionHolder) -> None:
-        runner = ComputingRunner(
-            ComputingSpec(self.cfg.udf, self.cfg.batch_size, self.cfg.model,
-                          self.cfg.refresh),
-            self.manager.refstore, self.manager.predeploy)
-        self.runners.append(runner)
-        with self._lock:
-            self._live_workers += 1
-        w = threading.Thread(target=self._worker_loop, args=(pid, holder,
-                                                             runner),
-                             name=f"{self.cfg.name}-compute-{pid}",
+    def scale_down(self, partitions: int = 1, stage: int = 0) -> int:
+        """Retire computing partitions from one stage group: remove the
+        holder from the upstream round-robin (under the lock, so no frame
+        can target it afterwards), push a StopRecord so its worker drains
+        the queued frames exactly-once into the sinks, and let the worker
+        merge its ComputingStats into the feed totals as it exits.  Never
+        drops below one partition (the elasticity controller additionally
+        enforces its spec's ``min_partitions``).  Returns the number
+        actually retired."""
+        group = self._group(stage)
+        dropped = 0
+        for _ in range(partitions):
+            with self._lock:
+                if group.closing or len(group.holders) <= 1:
+                    break
+                holder = group.holders.pop()
+                slot = next(s for s in group.slots if s.holder is holder)
+                slot.retire.set()
+                self.stats.scale_downs += 1
+                dropped += 1
+            # outside the lock: close() pushes the StopRecord (it may block
+            # briefly on a full queue while the worker drains), and the
+            # registry drops the holder so work stealing stops seeing it
+            holder.close()
+            self.manager.holder_manager.unregister(holder.holder_id)
+        return dropped
+
+    def _group(self, stage: int) -> _StageGroupRuntime:
+        if not self.stage_groups:
+            raise RuntimeError(
+                "elasticity requires the decoupled plan path; the "
+                "coupled/insert baselines are fixed-parallelism "
+                "measurement rigs")
+        return self.stage_groups[stage]
+
+    def _add_partition_locked(self, group: _StageGroupRuntime) -> None:
+        """Create holder + runner + worker for one new partition of
+        ``group``.  Caller holds ``self._lock``."""
+        pid = group.next_pid          # monotonic: retired ids never reused
+        group.next_pid += 1
+        holder = PartitionHolder((group.job, pid), self.cfg.holder_capacity)
+        self.manager.holder_manager.register(holder)
+        runner = ComputingRunner(group.spec, self.manager.refstore,
+                                 self.manager.predeploy)
+        slot = _WorkerSlot(pid, holder, runner)
+        w = threading.Thread(target=self._worker_loop, args=(group, slot),
+                             name=f"{self.cfg.name}-{group.name}-{pid}",
                              daemon=True)
+        slot.thread = w               # set BEFORE the slot becomes visible:
+        group.holders.append(holder)  # the controller reads slots lock-free
+        group.slots.append(slot)
+        group.peak_partitions = max(group.peak_partitions,
+                                    len(group.holders))
+        self.runners.append(runner)
+        group.live += 1
+        self._live_workers += 1
         self.workers.append(w)
         w.start()
 
@@ -346,17 +485,19 @@ class FeedHandle:
                     self.stats.retries += 1
                 time.sleep(self.cfg.retry_backoff_s * (2 ** (attempt - 1)))
 
-    def _worker_loop(self, pid: int, holder: PartitionHolder,
-                     runner: ComputingRunner) -> None:
+    def _worker_loop(self, group: _StageGroupRuntime,
+                     slot: _WorkerSlot) -> None:
+        pid, holder, runner = slot.pid, slot.holder, slot.runner
         try:
             while True:
                 frame = holder.pull(timeout=0.05)
                 if frame is None or isinstance(frame, StopRecord):
-                    # idle or our queue drained: try stealing a backlog
+                    # idle or our queue drained: try stealing a backlog —
+                    # never while retiring (the point is to shed capacity)
                     stolen = None
-                    if self.cfg.work_stealing:
+                    if self.cfg.work_stealing and not slot.retire.is_set():
                         deep = self.manager.holder_manager.deepest(
-                            f"{self.cfg.name}:intake", exclude=pid)
+                            group.job, exclude=pid)
                         if deep is not None and deep.depth > 1:
                             stolen = deep.steal()
                     if stolen is None:
@@ -376,6 +517,11 @@ class FeedHandle:
                 t0 = time.perf_counter()
                 out = self._run_with_retry(runner, frame)
                 holder.record_service(time.perf_counter() - t0)
+                if group.next is not None:
+                    # intermediate stage group: hand the enriched batch to
+                    # the next group's holders, not the sinks
+                    self._push_downstream(group, out)
+                    continue
                 out = self._project(out)
                 # fan-out: every sink holder gets every batch exactly once
                 delivered = 0
@@ -400,8 +546,54 @@ class FeedHandle:
         except BaseException as e:
             self._worker_errs.append(e)
         finally:
+            self._on_worker_exit(group, slot)
+
+    def _push_downstream(self, group: _StageGroupRuntime, out: Dict) -> None:
+        """Round-robin an enriched batch into the next stage group's live
+        holder list, re-targeting when the chosen holder was retired
+        between snapshot and push (the same exactly-once rule the intake
+        follows)."""
+        nxt = group.next
+        while True:
             with self._lock:
-                self._live_workers -= 1
+                hs = list(nxt.holders)
+                i = group.rr
+                group.rr += 1
+            target = hs[i % len(hs)]
+            try:
+                target.push(out)
+                return
+            except RuntimeError:
+                if not target.closed:
+                    raise
+
+    def _on_worker_exit(self, group: _StageGroupRuntime,
+                        slot: _WorkerSlot) -> None:
+        now = time.perf_counter()
+        downstream: List[PartitionHolder] = []
+        with self._lock:
+            group.live -= 1
+            self._live_workers -= 1
+            self.stats.worker_seconds += now - slot.t_start
+            if slot.retire.is_set():
+                # scale_down fix: the retired runner's counts land in the
+                # feed totals the moment its worker exits, BEFORE the
+                # runner is dropped from the live lists — invocations and
+                # records can never vanish from FeedStats
+                self._retired_computing.merge(slot.runner.stats)
+                if slot.runner in self.runners:
+                    self.runners.remove(slot.runner)
+                if slot in group.slots:
+                    group.slots.remove(slot)
+            if group.live == 0 and group.next is not None:
+                # last worker of this group: drain protocol hops one group
+                # downstream (§7.1 — the storage job closes after the last
+                # computing job; intermediate groups close the same way)
+                group.next.closing = True
+                downstream = list(group.next.holders)
+        for h in downstream:          # outside the lock: close() can block
+            if not h.closed:
+                h.close()
 
     def _project(self, out: Dict) -> Dict:
         """Plan-level projection: restrict the columns sinks receive (id +
@@ -444,7 +636,7 @@ class FeedManager:
             holder_capacity=plan.holder_capacity,
             coalesce_rows=plan.coalesce_rows,
             coalesce_bytes=plan.coalesce_bytes,
-            fault_hook=plan.fault_hook)
+            fault_hook=plan.fault_hook, elastic=plan.elastic)
         handle = FeedHandle(cfg, self, plan.adapter, plan=plan)
         self.feeds[plan.name] = handle
         handle._t0 = time.perf_counter()
@@ -466,7 +658,8 @@ class FeedManager:
                           retry_backoff_s=cfg.retry_backoff_s,
                           coalesce_rows=cfg.coalesce_rows,
                           coalesce_bytes=cfg.coalesce_bytes,
-                          fault_hook=cfg.fault_hook))
+                          fault_hook=cfg.fault_hook,
+                          elastic=cfg.elastic))
             if cfg.udf is not None:
                 p.enrich(cfg.udf)
             if cfg.sink is not None:
@@ -513,14 +706,42 @@ class FeedManager:
             handle.sink_holders.append(sh)
             handle._sink_names.append(spec.name)
         handle.storage_holder = handle.sink_holders[0]
-        for pid in range(cfg.num_partitions):
-            holder = PartitionHolder((f"{cfg.name}:intake", pid),
-                                     cfg.holder_capacity)
-            self.holder_manager.register(holder)
-            handle.holders.append(holder)
-            handle._spawn_worker(pid, holder)
-        handle.intake = IntakeJob(handle.adapter, handle.holders)
+
+        # stage groups: the plan's independently-scalable chain segments
+        # (pre-stage-group IngestPlans lower to one group over plan.udf)
+        groups = plan.stage_groups or (StageGroup(
+            plan.udf.name if plan.udf is not None else "parse",
+            plan.udf, 0, plan.elastic),)
+        prev: Optional[_StageGroupRuntime] = None
+        for gid, g in enumerate(groups):
+            job = (f"{cfg.name}:intake" if gid == 0
+                   else f"{cfg.name}:stage{gid}")
+            rt = _StageGroupRuntime(
+                gid, g.name, job,
+                ComputingSpec(g.udf, cfg.batch_size, cfg.model,
+                              cfg.refresh), g.elastic)
+            handle.stage_groups.append(rt)
+            if prev is not None:
+                prev.next = rt
+            prev = rt
+        # the intake's live round-robin list IS group 0's holder list
+        handle.holders = handle.stage_groups[0].holders
+        for g, rt in zip(groups, handle.stage_groups):
+            n = g.partitions or cfg.num_partitions
+            if rt.elastic is not None:
+                # elastic groups start inside their declared bounds
+                n = min(max(n, rt.elastic.min_partitions),
+                        rt.elastic.max_partitions)
+            with handle._lock:
+                for _ in range(n):
+                    handle._add_partition_locked(rt)
+        handle.intake = IntakeJob(handle.adapter, handle.holders,
+                                  lock=handle._lock)
         handle.intake.start()
+        if any(rt.elastic is not None for rt in handle.stage_groups):
+            handle.controller = ElasticityController(
+                handle, cfg.batch_size, name=cfg.name)
+            handle.controller.start()
 
     # ------------------------------------------------- coupled baselines
     def _start_coupled(self, cfg: FeedConfig, handle: FeedHandle,

@@ -127,25 +127,43 @@ class IntakeJob(threading.Thread):
     """Long-running intake: distributes frames round-robin over the intake
     partition holders, then closes them (StopRecord drain, §7.1).
 
-    ``holders`` is a live list — the elastic runtime may append/remove
-    holders mid-feed; the round-robin partitioner re-targets automatically.
+    ``holders`` is a live list — the elastic runtime appends (scale_up) and
+    removes (scale_down) holders mid-feed under the feed handle's ``lock``;
+    the round-robin partitioner re-targets automatically.  A push that
+    lands on a holder retired between the snapshot and the push (it drained
+    and closed) is retried against a fresh snapshot, so scale_down can
+    never drop a frame.  On completion the intake flips ``closing`` under
+    the lock *before* closing the holders — ``scale_up`` checks it under
+    the same lock, so a late scale-up can never add a holder that would
+    miss its StopRecord.
     """
 
-    def __init__(self, adapter: Adapter, holders: List[PartitionHolder]):
+    def __init__(self, adapter: Adapter, holders: List[PartitionHolder],
+                 lock: Optional[threading.Lock] = None):
         super().__init__(name="intake-job", daemon=True)
         self.adapter = adapter
         self.holders = holders
         self.frames_in = 0
         self.records_in = 0
+        self.closing = False
         self.error: Optional[BaseException] = None
+        self._lock = lock or threading.Lock()
 
     def run(self) -> None:
         try:
             i = 0
             for frame in self.adapter.frames():
-                # snapshot the live holder list each frame (elasticity)
-                hs = list(self.holders)
-                hs[i % len(hs)].push(frame)
+                while True:
+                    # snapshot the live holder list each frame (elasticity)
+                    hs = list(self.holders)
+                    target = hs[i % len(hs)]
+                    try:
+                        target.push(frame)
+                        break
+                    except RuntimeError:
+                        if not target.closed:
+                            raise
+                        # holder retired mid-push: re-target round-robin
                 i += 1
                 self.frames_in += 1
                 # dict frames arrive pre-parsed; len() would count COLUMNS
@@ -155,6 +173,9 @@ class IntakeJob(threading.Thread):
         except BaseException as e:
             self.error = e
         finally:
-            for h in list(self.holders):
-                if not h.closed:
+            with self._lock:
+                self.closing = True
+                hs = list(self.holders)
+            for h in hs:                 # close OUTSIDE the lock: push of
+                if not h.closed:         # the StopRecord may block briefly
                     h.close()

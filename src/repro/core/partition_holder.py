@@ -40,6 +40,26 @@ class StopRecord:
 STOP = StopRecord()
 
 
+def frame_rows(frame: Any) -> int:
+    """Rows in a frame, for backlog accounting: dict frames (pre-parsed
+    struct-of-arrays) count their leading dim, byte frames their lines."""
+    if isinstance(frame, dict):
+        v = next(iter(frame.values()))
+        return int(v.shape[0])
+    try:
+        return len(frame)
+    except TypeError:
+        return 1
+
+
+def frame_bytes(frame: Any) -> int:
+    if isinstance(frame, dict):
+        return int(sum(v.nbytes for v in frame.values()))
+    if isinstance(frame, (list, tuple)):
+        return sum(len(line) for line in frame)
+    return 0
+
+
 class PartitionHolder:
     def __init__(self, holder_id: Tuple[str, int], capacity: int = 16):
         self.holder_id = holder_id
@@ -66,6 +86,14 @@ class PartitionHolder:
             if self._closed and not isinstance(frame, StopRecord):
                 raise RuntimeError(f"push to closed holder {self.holder_id}")
             self._q.append(frame)
+            if isinstance(frame, StopRecord):
+                # close is atomic with the STOP enqueue: a racing push must
+                # RAISE (so the elastic intake/inter-group round-robin
+                # re-targets it) rather than land behind the StopRecord,
+                # where a retiring worker would never see it
+                self._closed = True
+                self._not_full.notify_all()
+                self._not_empty.notify_all()
             self.pushed += 1
             self.push_wait_s += time.perf_counter() - t0
             self._not_empty.notify()
@@ -136,6 +164,20 @@ class PartitionHolder:
     def depth(self) -> int:
         with self._lock:
             return len(self._q)
+
+    def backlog(self) -> Tuple[int, int]:
+        """(rows, bytes) currently queued, StopRecords excluded — the
+        elasticity controller's load signal.  O(depth), and depth is
+        bounded by ``capacity``, so sampling stays cheap."""
+        with self._lock:
+            frames = list(self._q)
+        rows = nbytes = 0
+        for f in frames:
+            if isinstance(f, StopRecord):
+                continue
+            rows += frame_rows(f)
+            nbytes += frame_bytes(f)
+        return rows, nbytes
 
     @property
     def closed(self) -> bool:

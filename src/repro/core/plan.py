@@ -46,6 +46,7 @@ import jax
 import numpy as np
 
 from repro.core import records
+from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
 from repro.core.refdata import RefStore
@@ -74,10 +75,35 @@ class SinkSpec:
         return self.store is not None
 
 
+@dataclasses.dataclass(frozen=True)
+class StageGroup:
+    """One independently-scalable segment of the compiled chain: its own
+    fused UDF, its own worker pool + holders at runtime, its own elastic
+    bounds.  Groups are linked by intermediate ``PartitionHolder``s, so a
+    heavy-state stage (Q6) scales — and later, places — independently of
+    cheap probe stages."""
+    name: str
+    udf: Optional[EnrichUDF]       # fused sub-chain of this group (or None)
+    partitions: int = 0            # 0 -> plan.num_partitions
+    elastic: Optional[ElasticSpec] = None
+
+
 # FeedConfig knobs a plan carries through to the feed runtime
 _OPTION_KEYS = ("num_partitions", "holder_capacity", "work_stealing",
                 "max_retries", "retry_backoff_s", "coalesce_rows",
-                "coalesce_bytes", "fault_hook")
+                "coalesce_bytes", "fault_hook", "elastic")
+
+
+def _coerce_elastic(value) -> Optional[ElasticSpec]:
+    if value is None or isinstance(value, ElasticSpec):
+        return value
+    if isinstance(value, dict):
+        try:
+            return ElasticSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid elastic spec {value!r}: {e}") from e
+    raise PlanError(f"elastic must be an ElasticSpec or dict, got "
+                    f"{type(value).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +128,12 @@ class IngestPlan:
     coalesce_rows: Optional[int] = None  # None -> feed.py's auto default
     coalesce_bytes: int = 8 << 20
     fault_hook: Optional[Callable[[int], bool]] = None
+    # per-stage parallelism: >= 1 independently-scalable segments of the
+    # fused chain (always at least one group; single-group plans execute
+    # exactly as before).  Plan-level ``elastic`` is the default bound set
+    # for groups that do not declare their own.
+    stage_groups: Tuple[StageGroup, ...] = ()
+    elastic: Optional[ElasticSpec] = None
 
     @property
     def store_spec(self) -> Optional[StoreSpec]:
@@ -142,23 +174,37 @@ class Pipeline:
     def options(self, **kw: Any) -> "Pipeline":
         """Feed-runtime knobs: num_partitions, holder_capacity,
         work_stealing, max_retries, retry_backoff_s, coalesce_rows,
-        coalesce_bytes, fault_hook."""
+        coalesce_bytes, fault_hook, elastic (an ``ElasticSpec`` or kwargs
+        dict — the feed-wide default elastic bounds; per-stage bounds go on
+        ``enrich(..., elastic=...)``)."""
         for k in kw:
             if k not in _OPTION_KEYS:
                 raise PlanError(f"unknown option {k!r} "
                                 f"(valid: {', '.join(_OPTION_KEYS)})")
+        if "elastic" in kw:
+            kw = dict(kw, elastic=_coerce_elastic(kw["elastic"]))
         self._opts.update(kw)
         return self
 
-    def enrich(self, udf: EnrichUDF) -> "Pipeline":
-        self._stages.append(("enrich", udf))
+    def enrich(self, udf: EnrichUDF, partitions: Optional[int] = None,
+               elastic: Optional[ElasticSpec] = None) -> "Pipeline":
+        """Add an enrichment stage.  Declaring ``partitions`` and/or
+        ``elastic`` makes this stage a **stage-group boundary**: it gets its
+        own holder + worker pool (following undeclared stages fuse into it),
+        so a heavy stage scales independently of the rest of the chain."""
+        if partitions is not None and partitions < 1:
+            raise PlanError(
+                f"enrich(partitions=...) must be >= 1, got {partitions}")
+        self._stages.append(("enrich", (udf, partitions,
+                                        _coerce_elastic(elastic))))
         return self
 
     def filter(self, pred: Callable, name: Optional[str] = None
                ) -> "Pipeline":
         self._n_filters += 1
         fname = name or f"filter_{self._n_filters}"
-        self._stages.append(("filter", make_filter(fname, pred)))
+        self._stages.append(("filter", (make_filter(fname, pred),
+                                        None, None)))
         return self
 
     def project(self, *cols: str) -> "Pipeline":
@@ -180,7 +226,7 @@ class Pipeline:
     def compile(self, refstore: RefStore) -> IngestPlan:
         """Validate + fuse + lower into an immutable ``IngestPlan``."""
         udfs, project_cols, sinks = self._split_stages()
-        fused = self._fuse(udfs)
+        fused = self._fuse([u for u, _, _ in udfs])
         self._check_ref_tables(fused, refstore)
         out_cols = _validate_dtypes(fused, refstore,
                                     self._parse["batch_size"],
@@ -198,12 +244,53 @@ class Pipeline:
             delivered = project_cols
         else:
             delivered = tuple(out_cols)
+        groups = self._group_stages(udfs, fused)
+        for g in groups:
+            if g.elastic is not None and g.partitions and not (
+                    g.elastic.min_partitions <= g.partitions
+                    <= g.elastic.max_partitions):
+                raise PlanError(
+                    f"stage group {g.name!r}: partitions={g.partitions} "
+                    f"outside elastic bounds "
+                    f"[{g.elastic.min_partitions}, "
+                    f"{g.elastic.max_partitions}]")
         return IngestPlan(
             name=self._name, adapter=self._adapter, udf=fused,
             stage_names=tuple(u.name for u in (
                 fused.stages or (fused,))) if fused is not None else (),
             sinks=sinks, output_columns=delivered,
-            project_cols=project_cols, **self._parse, **self._opts)
+            project_cols=project_cols, stage_groups=groups,
+            **self._parse, **self._opts)
+
+    def _group_stages(self, udfs, fused) -> Tuple[StageGroup, ...]:
+        """Split the chain at declared stage boundaries.  A stage with
+        ``partitions``/``elastic`` opens a new group; undeclared stages fuse
+        into the current one (a filter right after Q6 runs at Q6's
+        parallelism).  Undeclared groups inherit the plan-level elastic
+        default from ``options(elastic=...)``."""
+        default_elastic = self._opts.get("elastic")
+        if not udfs:
+            return (StageGroup("parse", None, 0, default_elastic),)
+        runs: list = []
+        for udf, partitions, elastic in udfs:
+            boundary = partitions is not None or elastic is not None
+            if boundary or not runs:
+                runs.append([partitions or 0, elastic, [udf]])
+            else:
+                runs[-1][2].append(udf)
+        if len(runs) == 1:
+            # single group: keep the WHOLE-chain fusion object so the
+            # predeploy cache identity matches plan.udf (warmed elsewhere)
+            p, el, _ = runs[0]
+            return (StageGroup(fused.name, fused, p,
+                               el or default_elastic),)
+        groups = []
+        for p, el, members in runs:
+            gudf = (members[0] if len(members) == 1 else
+                    chain(">".join(u.name for u in members), *members))
+            groups.append(StageGroup(gudf.name, gudf, p,
+                                     el or default_elastic))
+        return tuple(groups)
 
     # -------------------------------------------------------------- helpers
     def _split_stages(self):
@@ -219,10 +306,11 @@ class Pipeline:
                     f"{kind}() after a sink stage (tee/store): transform "
                     f"stages must precede all sinks")
             if kind == "enrich":
-                if not isinstance(payload, EnrichUDF):
+                udf, _, _ = payload
+                if not isinstance(udf, EnrichUDF):
                     raise PlanError(
                         f"enrich() takes an EnrichUDF, got "
-                        f"{type(payload).__name__}")
+                        f"{type(udf).__name__}")
                 udfs.append(payload)
             elif kind == "filter":
                 udfs.append(payload)

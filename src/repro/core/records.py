@@ -107,14 +107,18 @@ def parse_json_lines(lines: List[bytes]) -> Dict[str, np.ndarray]:
 def pad_batch(batch: Dict[str, np.ndarray], size: int
               ) -> Dict[str, np.ndarray]:
     """Pad to the compiled batch size (valid=False rows are inert in every
-    UDF and dropped by the storage job)."""
+    UDF and dropped by the storage job).  Columns beyond the tweet schema —
+    enriched outputs of an upstream stage group crossing an intermediate
+    partition holder — are zero-padded at their own dtype/shape."""
     n = batch_rows(batch)
     if n == size:
         return batch
     assert n < size, (n, size)
     out = empty_batch(size)
-    for k in batch:
-        out[k][:n] = batch[k]
+    for k, v in batch.items():
+        if k not in out:
+            out[k] = np.zeros((size,) + v.shape[1:], v.dtype)
+        out[k][:n] = v
     return out
 
 

@@ -1,0 +1,500 @@
+"""Per-stage elasticity tests: the controller's control law (synchronous,
+against fakes), controller-driven scale up/down end-to-end, the
+plan-derived scale_up spec (regression for the shim-UDF bug), locked
+holder-list mutation under sustained ingestion, exactly-once scale_down
+drain, and retired-runner stats accounting.
+
+Deliberately hypothesis-free: CI runs this module in the minimal container
+job alongside test_pipeline_api.py.  Thread-heavy tests carry explicit
+join timeouts AND a module-level pytest-timeout so a wedged drain fails
+fast instead of hanging CI.
+"""
+
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputingStats, ElasticityController, ElasticSpec,
+                        FeedConfig, FeedManager, PlanError, RefStore,
+                        SyntheticAdapter, pipeline)
+from repro.core.elasticity import Decision
+from repro.core.enrich import queries as Q
+from repro.core.intake import Adapter
+from repro.core.records import SyntheticTweets
+
+pytestmark = pytest.mark.timeout(180)
+
+
+def make_manager(scale=0.002):
+    store = RefStore()
+    Q.make_reference_tables(store, scale=scale, seed=7)
+    return FeedManager(store)
+
+
+def scan_by_id(storage):
+    rows = {}
+    for chunk in storage.scan():
+        for i in range(chunk["id"].shape[0]):
+            rows[int(chunk["id"][i])] = {k: chunk[k][i] for k in chunk}
+    return rows
+
+
+class ReplayAdapter(Adapter):
+    """Pre-generated frames replayed at memory speed (sustained backlog)."""
+
+    def __init__(self, frames):
+        super().__init__()
+        self._frames = frames
+
+    def frames(self):
+        for f in self._frames:
+            if self._stop.is_set():
+                return
+            yield f
+
+
+class BurstThenQuietAdapter(Adapter):
+    """A burst of frames at memory speed, a quiet gap (the feed stays open
+    but idle), then a second burst — the square wave the controller must
+    ride up AND down within one feed."""
+
+    def __init__(self, frames, quiet_s):
+        super().__init__()
+        half = len(frames) // 2
+        self._phases = [frames[:half], frames[half:]]
+        self.quiet_s = quiet_s
+
+    def frames(self):
+        for i, phase in enumerate(self._phases):
+            if i:
+                time.sleep(self.quiet_s)
+            for f in phase:
+                if self._stop.is_set():
+                    return
+                yield f
+
+
+# ---------------------------------------------------------------------------
+# control law, synchronously against fakes (no threads, injectable clock)
+# ---------------------------------------------------------------------------
+
+class FakeHolder:
+    def __init__(self):
+        self.rows = 0
+
+    def backlog(self):
+        return self.rows, self.rows * 100
+
+
+def _fake_slot():
+    return SimpleNamespace(runner=SimpleNamespace(stats=ComputingStats()),
+                           thread=SimpleNamespace(is_alive=lambda: True))
+
+
+class FakeHandle:
+    def __init__(self, spec, partitions):
+        g = SimpleNamespace(gid=0, name="g", elastic=spec,
+                            holders=[FakeHolder() for _ in range(partitions)],
+                            slots=[_fake_slot() for _ in range(partitions)])
+        self.stage_groups = [g]
+
+    def set_backlog(self, rows):
+        g = self.stage_groups[0]
+        for h in g.holders:
+            h.rows = rows // len(g.holders)
+        g.holders[0].rows += rows - sum(h.rows for h in g.holders)
+
+    def scale_up(self, n, stage=0):
+        g = self.stage_groups[stage]
+        for _ in range(n):
+            g.holders.append(FakeHolder())
+            g.slots.append(_fake_slot())
+        return n
+
+    def scale_down(self, n, stage=0):
+        g = self.stage_groups[stage]
+        dropped = 0
+        for _ in range(n):
+            if len(g.holders) <= 1:
+                break
+            g.holders.pop()
+            g.slots.pop()
+            dropped += 1
+        return dropped
+
+
+def test_control_law_scales_up_with_hysteresis_and_cooldown():
+    spec = ElasticSpec(min_partitions=1, max_partitions=3, up_after=2,
+                       down_after=3, cooldown_s=1.0, high_watermark=1.5,
+                       low_watermark=0.25)
+    h = FakeHandle(spec, partitions=1)
+    c = ElasticityController(h, batch_size=100)
+    parts = lambda: len(h.stage_groups[0].holders)
+
+    h.set_backlog(200)                      # > 1.5 * 100 * 1
+    c.step(now=0.0)
+    assert parts() == 1                     # one high sample: not yet
+    c.step(now=0.1)
+    assert parts() == 2                     # up_after=2 reached
+    h.set_backlog(400)                      # > 1.5 * 100 * 2
+    c.step(now=0.2)
+    c.step(now=0.3)
+    assert parts() == 2                     # inside cooldown: held
+    c.step(now=1.2)
+    c.step(now=1.3)
+    assert parts() == 3                     # cooldown over
+    h.set_backlog(10_000)
+    for i in range(5):
+        c.step(now=2.5 + i)
+    assert parts() == 3                     # max_partitions is a hard bound
+
+
+def test_control_law_scales_down_to_min_when_idle():
+    spec = ElasticSpec(min_partitions=1, max_partitions=4, up_after=1,
+                       down_after=2, cooldown_s=0.0, low_watermark=0.25)
+    h = FakeHandle(spec, partitions=3)
+    c = ElasticityController(h, batch_size=100)
+
+    h.set_backlog(0)
+    for i in range(10):
+        c.step(now=float(i))
+    assert len(h.stage_groups[0].holders) == 1   # down to min, never below
+    downs = [d for d in c.decisions if d.action == "down"]
+    assert [d.partitions for d in downs] == [2, 1]
+    assert all(1 <= d.partitions <= 4 for d in c.decisions)
+
+
+def test_elastic_spec_and_plan_validation():
+    with pytest.raises(ValueError, match="min <= max"):
+        ElasticSpec(min_partitions=3, max_partitions=2)
+    with pytest.raises(ValueError, match="interval_s"):
+        ElasticSpec(interval_s=0)
+    mgr = make_manager()
+    adapter = SyntheticAdapter(total=10, frame_size=10)
+    with pytest.raises(PlanError, match="invalid elastic spec"):
+        pipeline(adapter, "bad").options(elastic=dict(min_partitions=9,
+                                                      max_partitions=1))
+    with pytest.raises(PlanError, match="elastic must be"):
+        pipeline(adapter, "bad2").options(elastic=42)
+    with pytest.raises(PlanError, match="partitions=..."):
+        pipeline(adapter, "bad3").enrich(Q.Q1, partitions=0)
+    with pytest.raises(PlanError, match="outside elastic bounds"):
+        (pipeline(adapter, "bad4")
+         .enrich(Q.Q1, partitions=8,
+                 elastic=ElasticSpec(min_partitions=1, max_partitions=2))
+         .store().compile(mgr.refstore))
+
+
+# ---------------------------------------------------------------------------
+# controller end-to-end: rides a burst up, rides the quiet back down
+# ---------------------------------------------------------------------------
+
+def test_controller_scales_up_under_backlog_and_down_when_idle():
+    mgr = make_manager()
+    total, frame = 4000, 50
+    # warm the Q4 executable first (shared predeploy cache): a cold jit
+    # compile inside the measured feed could eat the quiet window and
+    # leave the backlog high until the second burst — flaky scale_downs=0
+    warm = (pipeline(SyntheticAdapter(total=4 * frame, frame_size=frame,
+                                      seed=30), "ride-warm")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q4).store())
+    mgr.submit(warm).join(timeout=120)
+
+    frames = list(SyntheticTweets(seed=31).batches(total, frame))
+    plan = (pipeline(BurstThenQuietAdapter(frames, quiet_s=2.5), "ride")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0, holder_capacity=64,
+                     elastic=dict(min_partitions=1, max_partitions=3,
+                                  interval_s=0.01, up_after=1,
+                                  down_after=5, cooldown_s=0.05))
+            .enrich(Q.Q4)
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=240)
+    assert stats.stored == total                  # nothing lost or doubled
+    assert stats.scale_ups >= 1                   # rode the burst up...
+    assert stats.scale_downs >= 1                 # ...and the quiet down
+    decisions = h.controller.decisions
+    assert all(1 <= d.partitions <= 3 for d in decisions)
+    assert stats.peak_partitions["q4_nearby_monuments"] <= 3
+    # every sample also respected the bounds
+    assert all(1 <= p <= 3 for p in h.controller.partition_timeline())
+
+
+# ---------------------------------------------------------------------------
+# scale_up regression: plan-derived spec, bitwise-identical enrichment
+# ---------------------------------------------------------------------------
+
+def _enriched_plan(mgr, name, total, frame, rate=None):
+    return (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                      seed=13, rate=rate), name)
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1).enrich(Q.Q2)
+            .filter(lambda b: b["country"] >= 0, name="keep_all")
+            .store())
+
+
+def test_scale_up_plan_feed_bitwise_identical_to_unscaled():
+    """The acceptance criterion: a plan-submitted feed that scales up
+    mid-stream produces bitwise-identical enriched output to the same feed
+    without scaling (the old code rebuilt the spec from the FeedConfig
+    shim's ``cfg.udf`` — scaled-up workers would run the wrong pipeline)."""
+    mgr = make_manager()
+    total, frame = 2000, 50
+
+    h_plain = mgr.submit(_enriched_plan(mgr, "plain", total, frame))
+    s_plain = h_plain.join(timeout=120)
+    assert s_plain.stored == total
+
+    h_scaled = mgr.submit(_enriched_plan(mgr, "scaled", total, frame,
+                                         rate=30_000.0))
+    time.sleep(0.02)
+    added = h_scaled.scale_up(2)
+    s_scaled = h_scaled.join(timeout=120)
+    assert s_scaled.stored == total
+
+    # the scaled-up workers got the COMPILED PLAN's fused stages, not a
+    # spec re-derived from the shim config
+    plan_udf = h_scaled.plan.udf
+    assert added >= 1
+    assert all(r.spec.udf is plan_udf for r in h_scaled.runners)
+    assert h_scaled.stage_groups[0].spec.udf is plan_udf
+
+    plain, scaled = scan_by_id(h_plain.storage), scan_by_id(h_scaled.storage)
+    assert set(plain) == set(scaled)
+    for rid, row in plain.items():
+        for col, v in row.items():
+            np.testing.assert_array_equal(v, scaled[rid][col], err_msg=col)
+
+
+def test_scale_up_after_drain_is_refused():
+    mgr = make_manager()
+    h = mgr.submit(_enriched_plan(mgr, "drained", 200, 50))
+    h.join(timeout=120)
+    assert h.scale_up(1) == 0        # late worker would miss its StopRecord
+
+
+def test_scale_on_coupled_baseline_raises():
+    mgr = make_manager()
+    cfg = FeedConfig(name="coupled", udf=Q.Q1, batch_size=50,
+                     num_partitions=2, framework="balanced")
+    h = mgr.start(cfg, SyntheticAdapter(total=200, frame_size=50))
+    with pytest.raises(RuntimeError, match="decoupled plan path"):
+        h.scale_up(1)
+    with pytest.raises(RuntimeError, match="decoupled plan path"):
+        h.scale_down(1)
+    assert h.join(timeout=120).stored == 200
+
+
+# ---------------------------------------------------------------------------
+# locked holder-list mutation: scaling during sustained ingestion
+# ---------------------------------------------------------------------------
+
+def test_scaling_during_sustained_ingestion_drops_nothing():
+    """Stress the lock paths: scale up AND down repeatedly while a
+    replayed stream keeps every holder backlogged; every record must reach
+    the store and the tee exactly once."""
+    mgr = make_manager()
+    total, frame = 10_000, 25
+    frames = list(SyntheticTweets(seed=41).batches(total, frame))
+    seen = {}
+    lock = threading.Lock()
+
+    def counting_sink(batch):
+        ids = batch["id"][batch["valid"]]
+        with lock:
+            for i in ids:
+                seen[int(i)] = seen.get(int(i), 0) + 1
+
+    plan = (pipeline(ReplayAdapter(frames), "stress")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .tee(counting_sink, name="count")
+            .store())
+    h = mgr.submit(plan)
+
+    stop = threading.Event()
+
+    def churn():
+        step = 0
+        while not stop.is_set():
+            if step % 3 == 2:
+                h.scale_down(1)
+            else:
+                h.scale_up(1)
+            step += 1
+            time.sleep(0.01)
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        stats = h.join(timeout=240)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert stats.stored == total
+    assert len(seen) == total
+    assert set(seen.values()) == {1}          # exactly once, never twice
+    assert stats.scale_ups >= 2 and stats.scale_downs >= 1
+
+
+def test_holder_close_is_atomic_with_stop_enqueue():
+    """Regression (review finding): ``close()`` must mark the holder
+    closed the moment the StopRecord is ENQUEUED, not when a consumer
+    pulls it — otherwise a push racing into that window lands behind the
+    STOP on a retired holder and is silently lost (the round-robin
+    re-target only fires when push raises)."""
+    from repro.core import PartitionHolder, StopRecord
+    h = PartitionHolder(("t", 0), capacity=4)
+    h.push([b"a"])
+    h.close()
+    assert h.closed                        # atomic with the STOP enqueue
+    with pytest.raises(RuntimeError, match="closed holder"):
+        h.push([b"b"])                     # racing push bounces: re-target
+    assert h.pull(timeout=0) == [b"a"]     # pre-STOP frames still drain
+    assert isinstance(h.pull(timeout=0), StopRecord)
+
+
+def test_scale_down_drains_exactly_once_into_store():
+    mgr = make_manager()
+    total, frame = 5000, 25
+    frames = list(SyntheticTweets(seed=43).batches(total, frame))
+    plan = (pipeline(ReplayAdapter(frames), "drain")
+            .parse(batch_size=frame)
+            .options(num_partitions=3, coalesce_rows=0, holder_capacity=16)
+            .enrich(Q.Q1)
+            .store())
+    h = mgr.submit(plan)
+    time.sleep(0.05)                  # let the holders fill
+    dropped = h.scale_down(2)
+    stats = h.join(timeout=240)
+    assert dropped >= 1               # retired mid-stream, queues nonempty
+    assert stats.stored == total      # drained exactly-once, nothing lost
+    assert h.storage.count == total
+    assert len(h.stage_groups[0].holders) == 3 - dropped
+
+
+def test_retired_runner_stats_are_merged_into_feed_totals():
+    """Satellite bugfix: workers retired by scale_down must contribute
+    their ComputingStats to the feed totals — records must not vanish."""
+    mgr = make_manager()
+    total, frame = 4000, 25
+    frames = list(SyntheticTweets(seed=47).batches(total, frame))
+    plan = (pipeline(ReplayAdapter(frames), "retire-stats")
+            .parse(batch_size=frame)
+            .options(num_partitions=3, coalesce_rows=0, holder_capacity=16)
+            .enrich(Q.Q1)
+            .store())
+    h = mgr.submit(plan)
+    time.sleep(0.05)
+    dropped = h.scale_down(2)
+    stats = h.join(timeout=240)
+    assert dropped >= 1
+    assert stats.stored == total
+    # the retired workers' invocation/record counts made it into the totals
+    assert stats.computing.records == total
+    assert stats.computing.per_stage["q1_safety_level"].records == total
+    assert stats.computing.invocations == stats.sink_batches["store"]
+    # the retired runners were dropped from the live list after merging
+    assert len(h.runners) == len(h.stage_groups[0].slots)
+
+
+# ---------------------------------------------------------------------------
+# per-stage stage groups
+# ---------------------------------------------------------------------------
+
+def test_per_stage_groups_match_single_group_bitwise():
+    """Splitting the chain at a stage boundary (own worker pool, linked by
+    an intermediate holder) must not change a single output bit vs the
+    fully fused single-group plan."""
+    mgr = make_manager()
+    total, frame = 1500, 50
+
+    fused = (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                       seed=19), "fused")
+             .parse(batch_size=frame)
+             .options(num_partitions=1, coalesce_rows=0)
+             .enrich(Q.Q1).enrich(Q.Q2)
+             .store())
+    h_fused = mgr.submit(fused)
+    s_fused = h_fused.join(timeout=120)
+
+    split = (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                       seed=19), "split")
+             .parse(batch_size=frame)
+             .options(num_partitions=1, coalesce_rows=0)
+             .enrich(Q.Q1)
+             .enrich(Q.Q2, partitions=2)         # stage-group boundary
+             .store())
+    plan = split.compile(mgr.refstore)
+    assert [g.name for g in plan.stage_groups] == [
+        "q1_safety_level", "q2_religious_population"]
+    h_split = mgr.submit(plan)
+    s_split = h_split.join(timeout=120)
+
+    assert s_fused.stored == s_split.stored == total
+    a, b = scan_by_id(h_fused.storage), scan_by_id(h_split.storage)
+    assert set(a) == set(b)
+    for rid, row in a.items():
+        for col, v in row.items():
+            np.testing.assert_array_equal(v, b[rid][col], err_msg=col)
+    # both stages saw every record, each in its own group's workers
+    per = s_split.computing.per_stage
+    assert per["q1_safety_level"].records == total
+    assert per["q2_religious_population"].records == total
+    # the heavy group really ran 2 partitions
+    assert s_split.peak_partitions["q2_religious_population"] == 2
+
+
+def test_scale_targets_the_requested_stage_group():
+    mgr = make_manager()
+    total, frame = 3000, 50
+    plan = (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                      seed=23, rate=40_000.0), "staged")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .enrich(Q.Q2, partitions=1)
+            .store())
+    h = mgr.submit(plan)
+    time.sleep(0.02)
+    added = h.scale_up(2, stage=1)
+    stats = h.join(timeout=120)
+    assert stats.stored == total
+    if added:                          # scaling landed mid-stream
+        assert h.stage_groups[0].peak_partitions == 1
+        assert h.stage_groups[1].peak_partitions == 1 + added
+    # group-1 runners got group 1's sub-chain, not the whole fused chain
+    assert all(r.spec.udf.name == "q2_religious_population"
+               for r in h.stage_groups[1].slots
+               for r in [r.runner])
+
+
+def test_per_stage_elastic_only_scales_declared_stage():
+    """Elastic bounds declared on one stage leave the other static."""
+    mgr = make_manager()
+    total, frame = 4000, 50
+    frames = list(SyntheticTweets(seed=29).batches(total, frame))
+    plan = (pipeline(ReplayAdapter(frames), "stage-elastic")
+            .parse(batch_size=frame)
+            .options(num_partitions=1, coalesce_rows=0, holder_capacity=64)
+            .enrich(Q.Q1)
+            .enrich(Q.Q4, partitions=1,
+                    elastic=ElasticSpec(min_partitions=1, max_partitions=3,
+                                        interval_s=0.01, up_after=1,
+                                        cooldown_s=0.05))
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=240)
+    assert stats.stored == total
+    assert h.stage_groups[0].peak_partitions == 1      # static stage held
+    assert stats.peak_partitions["q4_nearby_monuments"] <= 3
+    # controller decisions only ever touched the declared stage (gid 1)
+    assert all(d.gid == 1 for d in h.controller.decisions)
