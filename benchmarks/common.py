@@ -16,6 +16,7 @@ import csv
 import io
 import sys
 import time
+import warnings
 from typing import Dict, List
 
 from repro.core import FeedConfig, FeedManager, RefStore, SyntheticAdapter
@@ -76,8 +77,12 @@ def run_feed(mgr: FeedManager, name: str, total: int, batch: int,
                      num_partitions=partitions, framework=framework,
                      model=model, refresh=refresh,
                      coalesce_rows=coalesce_rows)
-    h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=batch,
-                                        seed=11))
+    with warnings.catch_warnings():
+        # the benchmark rigs use the FeedConfig shim ON PURPOSE (identical
+        # measurement path across frameworks) — don't spam the CSV logs
+        warnings.simplefilter("ignore", DeprecationWarning)
+        h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=batch,
+                                            seed=11))
     stats = h.join(timeout=1200)
     assert stats.stored == total, (name, stats.stored, total)
     return stats

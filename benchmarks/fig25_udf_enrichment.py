@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -291,7 +292,10 @@ def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
             cfg = FeedConfig(name=f"f25-backlog-{label}-{rnd}", udf=Q.Q1,
                              batch_size=batch, num_partitions=2,
                              coalesce_rows=coal, holder_capacity=32)
-            h = mgr.start(cfg, ReplayAdapter(frames))
+            with warnings.catch_warnings():
+                # intentional shim use: the coalescer A/B predates plans
+                warnings.simplefilter("ignore", DeprecationWarning)
+                h = mgr.start(cfg, ReplayAdapter(frames))
             s = h.join(timeout=1200)
             assert s.stored == bl_total, (s.stored, bl_total)
         emit(FIG, f"backlog_coalesce_{label}", s.records_per_s, "rec/s",

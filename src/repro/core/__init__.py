@@ -37,6 +37,11 @@ from repro.core.partition_holder import (  # noqa: F401
     StopRecord,
 )
 from repro.core.predeploy import PredeployCache  # noqa: F401
+from repro.core.repair import (  # noqa: F401
+    RepairJob,
+    RepairSpec,
+    RepairStats,
+)
 from repro.core.refdata import (  # noqa: F401
     KEY_SENTINEL,
     RefSnapshot,

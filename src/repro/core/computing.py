@@ -112,6 +112,11 @@ class ComputingRunner:
         self._device_refs: Dict[str, Tuple[int, Dict[str, jax.Array]]] = {}
         self._state = None            # (versions, state) for stream/gated
         self._state_versions: Optional[Tuple[int, ...]] = None
+        # ref-version lineage of the LAST run() — the versions the batch
+        # was actually enriched under (captured at snapshot time, so a ref
+        # upsert racing the apply can never mark stored rows fresh).  The
+        # feed tags storage-bound batches with this (core/repair.py).
+        self.last_versions: Optional[Dict[str, int]] = None
         # fused UDFs: stage name -> (stage ref versions, state) so quiet
         # stages reuse their state while stale stages rebuild independently
         self._stage_states: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
@@ -246,6 +251,7 @@ class ComputingRunner:
 
         snaps = self.refstore.snapshot(udf.ref_tables)
         versions = tuple(s.version for s in snaps.values())
+        self.last_versions = dict(zip(snaps.keys(), versions))
         refs = self._refs_to_device(snaps)
 
         t0 = time.perf_counter()

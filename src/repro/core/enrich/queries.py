@@ -77,6 +77,13 @@ class EnrichUDF:
     # per stage) and to attribute per-stage ComputingStats, while the apply
     # side stays ONE predeployed executable for the whole chain.
     stages: Tuple["EnrichUDF", ...] = ()
+    # (ref table, batch column) pairs declaring that the UDF probes the
+    # table's PRIMARY KEYS with that batch column (Q1: safety_levels keys
+    # ARE country codes).  Lets the repair scheduler (core/repair.py)
+    # refine coarse version-staleness with a dirty-key probe: a stored
+    # segment none of whose rows touch an upserted key needs no repair.
+    # Tables without a declared pair fall back to coarse version matching.
+    repair_keys: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def stateless(self) -> bool:
@@ -152,7 +159,8 @@ def _q1_apply(batch, state, refs):
 
 
 Q1 = EnrichUDF("q1_safety_level", ("safety_levels",), None, _q1_apply,
-               "hash join")
+               "hash join",
+               repair_keys=(("safety_levels", "country"),))
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +258,8 @@ def _q5_apply(batch, state, refs):
 Q5 = EnrichUDF("q5_suspicious_names",
                ("facilities", "religious_buildings", "suspicious_names"),
                None, _q5_apply,
-               "hash join + 2x spatial join + group-by + order-by")
+               "hash join + 2x spatial join + group-by + order-by",
+               repair_keys=(("suspicious_names", "user_name_hash"),))
 
 
 # ---------------------------------------------------------------------------
@@ -372,10 +381,12 @@ def chain(name: str, *udfs: EnrichUDF) -> EnrichUDF:
         return out
 
     ops_mix = " | ".join(u.operators for u in flat)
+    rkeys = tuple(dict.fromkeys(
+        pair for u in flat for pair in u.repair_keys))
     return EnrichUDF(name, tables, state_fn if has_state else None,
                      apply_fn if has_state else
                      (lambda b, s, r: apply_fn(b, ((),) * len(flat), r)),
-                     ops_mix, stages=flat)
+                     ops_mix, stages=flat, repair_keys=rkeys)
 
 
 def make_filter(name: str, pred: Callable[[Dict[str, Array]], Array]

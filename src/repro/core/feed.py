@@ -79,6 +79,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -98,6 +99,7 @@ from repro.core.partition_holder import (ActivePartitionHolder,
 from repro.core.plan import IngestPlan, Pipeline, StageGroup, pipeline
 from repro.core.predeploy import PredeployCache
 from repro.core.refdata import RefStore
+from repro.core.repair import RepairJob, RepairStats
 from repro.core.storage import StorageJob
 
 # coalesce_rows=None resolves to this many batches' worth of rows for the
@@ -105,8 +107,31 @@ from repro.core.storage import StorageJob
 # numbers in CHANGES.md PR 2)
 COALESCE_DEFAULT_BATCHES = 4
 
+
+def _store_consumer(storage: StorageJob) -> Callable:
+    """Storage-sink consumer: unwrap lineage-tagged batches (plan path);
+    bare dicts (pure-ingestion / legacy call sites) store unversioned."""
+    def consume(frame) -> None:
+        if isinstance(frame, _StoreBatch):
+            storage.write(frame.batch, lineage=frame.lineage)
+        else:
+            storage.write(frame)
+    return consume
+
 _frame_rows = frame_rows      # shared with the holders' backlog accounting
 _frame_bytes = frame_bytes
+
+
+class _StoreBatch:
+    """An enriched batch plus the ref-version lineage it was computed
+    under, en route to the STORE sink holder (tee sinks receive the bare
+    dict).  The storage job records the lineage per stored chunk so the
+    repair subsystem (core/repair.py) can find stale rows later."""
+    __slots__ = ("batch", "lineage")
+
+    def __init__(self, batch: Dict, lineage: Optional[Dict[str, int]]):
+        self.batch = batch
+        self.lineage = lineage
 
 
 @dataclasses.dataclass
@@ -183,6 +208,16 @@ class FeedStats:
     worker_seconds: float = 0.0
     backlog_p95_rows: float = 0.0
     peak_partitions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # progressive re-enrichment (core/repair.py): currency of stored rows
+    # under mid-/post-ingestion reference updates.  repair_drain_s is the
+    # post-feed convergence time join() spent, so benchmarks can separate
+    # ingest-side throughput from the repair catch-up.
+    stale_rows: int = 0
+    repaired_rows: int = 0
+    repair_lag_p50_s: float = 0.0
+    repair_lag_p95_s: float = 0.0
+    repair_drain_s: float = 0.0
+    repair: Optional[RepairStats] = None
 
     @property
     def records_per_s(self) -> float:
@@ -248,7 +283,9 @@ class FeedHandle:
         # the first for pre-plan call sites
         self.sink_holders: List[ActivePartitionHolder] = []
         self._sink_names: List[str] = []
+        self._store_sink_idx: Optional[int] = None
         self.storage_holder: Optional[ActivePartitionHolder] = None
+        self.repair: Optional[RepairJob] = None
         self.stats = FeedStats()
         self._t0 = 0.0
         self._lock = threading.Lock()
@@ -295,8 +332,17 @@ class FeedHandle:
                 raise self._worker_errs[0]
             if self.intake is not None and self.intake.error is not None:
                 raise self.intake.error
+            if self.repair is not None and not self._finalized:
+                # the feed's own work is done: repair the remaining stale
+                # segments to convergence so join() hands back a store
+                # that is current against the final reference versions
+                self.repair.finish(timeout)
+                if self.repair.error is not None:
+                    raise self.repair.error
             self._finalize()
         finally:
+            if self.repair is not None:
+                self.repair.stop()      # idempotent; error paths too
             self._deregister()
         return self.stats
 
@@ -327,6 +373,14 @@ class FeedHandle:
                  for g in self.stage_groups), default=0.0)
         for name, sh in zip(self._sink_names, self.sink_holders):
             self.stats.sink_batches[name] = sh.pulled
+        if self.repair is not None:
+            r = self.repair.stats
+            self.stats.repair = r
+            self.stats.stale_rows = r.stale_rows
+            self.stats.repaired_rows = r.repaired_rows
+            self.stats.repair_lag_p50_s = r.repair_lag_p50_s
+            self.stats.repair_lag_p95_s = r.repair_lag_p95_s
+            self.stats.repair_drain_s = r.drain_s
         self.stats.predeploy = self.manager.predeploy.stats()
 
     def _deregister(self) -> None:
@@ -523,16 +577,23 @@ class FeedHandle:
                     self._push_downstream(group, out)
                     continue
                 out = self._project(out)
-                # fan-out: every sink holder gets every batch exactly once
+                # fan-out: every sink holder gets every batch exactly once;
+                # the store sink's copy is tagged with the ref-version
+                # lineage the batch was enriched under (repair subsystem)
+                lineage = runner.last_versions
                 delivered = 0
-                for sh in self.sink_holders:
+                for si, sh in enumerate(self.sink_holders):
                     if sh.error is not None:
                         # sink consumer raised: its holder closed itself
                         # (fail-fast drain); keep feeding the healthy
                         # sinks — the error is re-raised by join()
                         continue
                     try:
-                        sh.push(out)
+                        if si == self._store_sink_idx and \
+                                lineage is not None:
+                            sh.push(_StoreBatch(out, lineage))
+                        else:
+                            sh.push(out)
                         delivered += 1
                     except RuntimeError:
                         if sh.error is None:     # not a sink failure
@@ -598,10 +659,12 @@ class FeedHandle:
     def _project(self, out: Dict) -> Dict:
         """Plan-level projection: restrict the columns sinks receive (id +
         valid always flow).  Cheap dict subset — the arrays are shared, not
-        copied; sinks must treat batches as read-only (they already do)."""
-        if self.plan is None or self.plan.project_cols is None:
+        copied; sinks must treat batches as read-only (they already do).
+        Shared with the repair job via ``IngestPlan.restrict`` so repaired
+        rows carry exactly the stored column set."""
+        if self.plan is None:
             return out
-        return {k: out[k] for k in self.plan.project_cols if k in out}
+        return self.plan.restrict(out)
 
 
 class FeedManager:
@@ -647,8 +710,16 @@ class FeedManager:
     def start(self, cfg: FeedConfig, adapter: Adapter) -> FeedHandle:
         """Compatibility shim: a framework="new" FeedConfig is lowered onto
         a one-stage plan and submitted; the coupled/insert baselines keep
-        their dedicated measurement paths."""
+        their dedicated measurement paths (they are rigs, not deprecated).
+        The drivers (train/data_feed.py, the examples) are on the plan API
+        now, so the shim path warns per the ROADMAP deprecation plan."""
         if cfg.framework == "new":
+            warnings.warn(
+                "FeedConfig/FeedManager.start is a compatibility shim over "
+                "the plan API and will be removed: build the feed with "
+                "pipeline(adapter).parse(...)....store()/.tee(...) and "
+                "FeedManager.submit instead",
+                DeprecationWarning, stacklevel=2)
             p = (pipeline(adapter, cfg.name)
                  .parse(cfg.batch_size, cfg.model, cfg.refresh)
                  .options(num_partitions=cfg.num_partitions,
@@ -695,8 +766,10 @@ class FeedManager:
             if spec.is_store:
                 nstore = spec.store.partitions or cfg.num_partitions
                 handle.storage = StorageJob(nstore, spec.store.spill_dir,
-                                            spec.store.upsert)
-                consumer = handle.storage.write
+                                            spec.store.upsert,
+                                            spec.store.segment_rows)
+                handle._store_sink_idx = i
+                consumer = _store_consumer(handle.storage)
             else:
                 consumer = spec.consumer
             sh = ActivePartitionHolder(
@@ -742,6 +815,13 @@ class FeedManager:
             handle.controller = ElasticityController(
                 handle, cfg.batch_size, name=cfg.name)
             handle.controller.start()
+        store_spec = plan.store_spec
+        if store_spec is not None and store_spec.refresh is not None:
+            # progressive re-enrichment: the background repair scheduler
+            # (compile() guaranteed an enrich stage and a single group)
+            handle.repair = RepairJob(plan, handle.storage, self.refstore,
+                                      self.predeploy, handle=handle)
+            handle.repair.start()
 
     # ------------------------------------------------- coupled baselines
     def _start_coupled(self, cfg: FeedConfig, handle: FeedHandle,

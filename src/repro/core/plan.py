@@ -50,6 +50,7 @@ from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
 from repro.core.refdata import RefStore
+from repro.core.repair import RepairSpec
 
 
 class PlanError(ValueError):
@@ -58,10 +59,15 @@ class PlanError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class StoreSpec:
-    """The storage-job sink (partitioned column store, see storage.py)."""
+    """The storage-job sink (partitioned column store, see storage.py).
+    ``refresh`` attaches a progressive re-enrichment policy: a background
+    ``RepairJob`` (core/repair.py) keeps the stored rows' enrichments
+    current as reference tables are upserted mid- and post-ingestion."""
     partitions: int = 0            # 0 -> plan.num_partitions
     spill_dir: Optional[str] = None
     upsert: bool = False
+    segment_rows: int = 100_000
+    refresh: Optional[RepairSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +112,18 @@ def _coerce_elastic(value) -> Optional[ElasticSpec]:
                     f"{type(value).__name__}")
 
 
+def _coerce_repair(value) -> Optional[RepairSpec]:
+    if value is None or isinstance(value, RepairSpec):
+        return value
+    if isinstance(value, dict):
+        try:
+            return RepairSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid refresh spec {value!r}: {e}") from e
+    raise PlanError(f"store(refresh=...) takes a RepairSpec or dict, got "
+                    f"{type(value).__name__}")
+
+
 @dataclasses.dataclass(frozen=True)
 class IngestPlan:
     """A compiled, immutable ingestion plan.  ``FeedManager.submit``
@@ -141,6 +159,14 @@ class IngestPlan:
             if s.is_store:
                 return s.store
         return None
+
+    def restrict(self, out: Dict) -> Dict:
+        """Apply the plan's projection to an enriched batch (id + valid
+        always flow).  Shared by the feed's sink fan-out and the repair
+        job, so repaired rows carry exactly the stored column set."""
+        if self.project_cols is None:
+            return out
+        return {k: out[k] for k in self.project_cols if k in out}
 
 
 def pipeline(adapter: Adapter, name: str = "pipeline") -> "Pipeline":
@@ -217,9 +243,15 @@ class Pipeline:
         return self
 
     def store(self, partitions: int = 0, spill_dir: Optional[str] = None,
-              upsert: bool = False) -> "Pipeline":
+              upsert: bool = False, segment_rows: int = 100_000,
+              refresh=None) -> "Pipeline":
+        """The column-store sink.  ``refresh=RepairSpec(...)`` (or a kwargs
+        dict) enables progressive re-enrichment: a background repair job
+        re-runs the plan's enrich stages over stored rows whose ref-version
+        lineage went stale (see core/repair.py)."""
         self._stages.append(("store", StoreSpec(partitions, spill_dir,
-                                                upsert)))
+                                                upsert, segment_rows,
+                                                _coerce_repair(refresh))))
         return self
 
     # -------------------------------------------------------------- compile
@@ -254,6 +286,7 @@ class Pipeline:
                     f"outside elastic bounds "
                     f"[{g.elastic.min_partitions}, "
                     f"{g.elastic.max_partitions}]")
+        self._check_repair(fused, sinks, project_cols, groups)
         return IngestPlan(
             name=self._name, adapter=self._adapter, udf=fused,
             stage_names=tuple(u.name for u in (
@@ -291,6 +324,48 @@ class Pipeline:
             groups.append(StageGroup(gudf.name, gudf, p,
                                      el or default_elastic))
         return tuple(groups)
+
+    def _check_repair(self, fused, sinks, project_cols, groups) -> None:
+        """Progressive re-enrichment preconditions, enforced at compile
+        time so a repair-enabled plan can never reach a state it cannot
+        repair from."""
+        spec = next((s.store.refresh for s in sinks if s.is_store), None)
+        if spec is None:
+            return
+        if fused is None:
+            raise PlanError(
+                "store(refresh=RepairSpec(...)) needs at least one "
+                "enrich stage: there is nothing to re-enrich")
+        if self._parse["model"] == "per_record":
+            raise PlanError(
+                "store(refresh=...) is incompatible with model="
+                "'per_record': repair re-enriches at batch granularity "
+                "through the per-batch predeployed executable")
+        if self._parse["model"] == "stream":
+            raise PlanError(
+                "store(refresh=...) is incompatible with model='stream': "
+                "stream feeds enrich every batch with feed-lifetime state "
+                "built under the INITIAL ref versions, while lineage "
+                "records the per-batch snapshot versions — rows enriched "
+                "from stale state would be tagged fresh and never "
+                "repaired (use model='per_batch' with refresh='version' "
+                "for stream-like cost with repairable lineage)")
+        if len(groups) > 1:
+            raise PlanError(
+                "store(refresh=...) requires a single stage group: with "
+                "per-stage splits the storage-bound batch only carries "
+                "the LAST group's ref-version lineage, so staleness of "
+                "earlier groups' tables could be missed (fuse the chain, "
+                "or use feed-wide options(elastic=...) which keeps one "
+                "group)")
+        if project_cols is not None:
+            missing = [c for c in records.TWEET_SCHEMA
+                       if c not in project_cols]
+            if missing:
+                raise PlanError(
+                    f"store(refresh=...) needs every input schema column "
+                    f"stored so rows can be re-enriched from scratch; "
+                    f"project() drops {missing}")
 
     # -------------------------------------------------------------- helpers
     def _split_stages(self):

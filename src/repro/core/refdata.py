@@ -27,9 +27,16 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core import nputil
+
+# change listener: (table name, version after the write, changed keys).
+# The repair scheduler (core/repair.py) subscribes these to build its
+# staleness index: dirty ref versions -> stale stored segments.
+ChangeListener = Callable[[str, int, np.ndarray], None]
 
 KEY_SENTINEL = np.iinfo(np.int64).max  # empty slot marker (sorts last)
 
@@ -82,40 +89,71 @@ class RefTable:
                 base, shape = v.subdtype
                 self._cols[k] = np.zeros((capacity,) + shape, base)
         self._snapshot: Optional[RefSnapshot] = None
+        self._listeners: List[ChangeListener] = []
+
+    # -------------------------------------------------------- change events
+    def add_listener(self, fn: ChangeListener) -> None:
+        """Subscribe to writes: ``fn(name, version, changed_keys)`` fires
+        after every upsert/delete, OUTSIDE the write lock (a listener may
+        read ``version``/``snapshot`` without deadlocking).  Listeners
+        must be fast and never raise — they run on the writer's thread."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn: ChangeListener) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _notify(self, version: int, keys: np.ndarray,
+                listeners: List[ChangeListener]) -> None:
+        for fn in listeners:
+            fn(self.name, version, keys)
 
     # ------------------------------------------------------------------ DML
     def upsert(self, keys: np.ndarray, **cols: np.ndarray) -> None:
         """UPSERT semantics per the paper's footnote 1: replace the row when
-        the key exists, insert otherwise."""
+        the key exists, insert otherwise.  Vectorized (this is the repair
+        workload's hot write path — frequent small upserts against large
+        tables): membership is one argsort + searchsorted probe instead of
+        an O(table) Python dict rebuild per call; within a call the LAST
+        occurrence of a duplicated key wins, as sequential replace did."""
         keys = np.asarray(keys, np.int64).reshape(-1)
         if (keys == KEY_SENTINEL).any():
             raise ValueError("KEY_SENTINEL is reserved")
+        if keys.size == 0:
+            return
         with self._lock:
-            existing = {int(k): i for i, k in
-                        enumerate(self._key[:self._size])}
-            for j, key in enumerate(keys):
-                i = existing.get(int(key))
-                if i is None:
-                    if self._size >= self.capacity:
-                        raise RuntimeError(
-                            f"table {self.name} over capacity "
-                            f"{self.capacity}")
-                    i = self._size
-                    self._size += 1
-                    existing[int(key)] = i
-                self._key[i] = key
-                for c, arr in cols.items():
-                    self._cols[c][i] = np.asarray(arr)[j]
+            uniq, last = nputil.keep_last(keys)
+            cur = self._key[:self._size]
+            order = np.argsort(cur, kind="stable")
+            found, loc, _ = nputil.sorted_find(cur, uniq, sorter=order)
+            n_new = int((~found).sum())
+            if self._size + n_new > self.capacity:
+                raise RuntimeError(
+                    f"table {self.name} over capacity {self.capacity}")
+            slots = np.empty(uniq.size, np.int64)
+            slots[found] = loc[found]
+            slots[~found] = np.arange(self._size, self._size + n_new)
+            self._size += n_new
+            self._key[slots] = uniq
+            for c, arr in cols.items():
+                self._cols[c][slots] = np.asarray(arr)[last]
             self._version += 1
             self._snapshot = None
+            version, listeners = self._version, list(self._listeners)
+        self._notify(version, keys.copy(), listeners)
 
     def delete(self, keys: np.ndarray) -> int:
-        keys = set(np.asarray(keys, np.int64).reshape(-1).tolist())
+        keys = np.unique(np.asarray(keys, np.int64).reshape(-1))
+        version = removed_keys = None
         with self._lock:
-            keep = [i for i in range(self._size)
-                    if int(self._key[i]) not in keys]
-            removed = self._size - len(keep)
+            cur = self._key[:self._size]
+            rm = np.isin(cur, keys)
+            removed = int(rm.sum())
             if removed:
+                removed_keys = cur[rm].copy()
+                keep = np.where(~rm)[0]
                 for c in self._cols:
                     self._cols[c][:len(keep)] = self._cols[c][keep]
                 self._key[:len(keep)] = self._key[keep]
@@ -123,7 +161,10 @@ class RefTable:
                 self._size = len(keep)
                 self._version += 1
                 self._snapshot = None
-            return removed
+                version, listeners = self._version, list(self._listeners)
+        if removed:
+            self._notify(version, removed_keys, listeners)
+        return removed
 
     # ------------------------------------------------------------- snapshot
     def snapshot(self) -> RefSnapshot:
@@ -193,3 +234,14 @@ class RefStore:
 
     def version(self, names: Tuple[str, ...]) -> Tuple[int, ...]:
         return tuple(self._tables[n].version for n in names)
+
+    def subscribe(self, names: Tuple[str, ...],
+                  fn: ChangeListener) -> None:
+        for n in names:
+            self._tables[n].add_listener(fn)
+
+    def unsubscribe(self, names: Tuple[str, ...],
+                    fn: ChangeListener) -> None:
+        for n in names:
+            if n in self._tables:
+                self._tables[n].remove_listener(fn)

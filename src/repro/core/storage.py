@@ -4,12 +4,27 @@ key and append them to partitioned column stores.
 Idempotence: each partition keeps a primary-key index; re-written keys are
 skipped (insert mode) or replace the previous row logically (upsert mode).
 With the feed manager's at-least-once batch retry this yields exactly-once
-*storage* semantics — the property the hypothesis tests pin down.
+*storage* semantics — the property the hypothesis tests pin down.  The
+index is a sorted pair of numpy arrays (pk, latest global row): membership
+is one vectorized ``searchsorted`` probe and updates are bulk merges, so
+the per-batch insert path has no per-row Python loop.
 
 Durability: partitions buffer columns in memory and flush immutable
 ``.npz`` segments plus a JSON manifest (atomic rename) when ``spill_dir``
 is set — an LSM-flavored, crash-consistent layout; ``recover()`` reloads
 manifested segments after a crash.
+
+Lineage (core/repair.py): every appended chunk — and, after flush, every
+segment — records the **reference-version lineage** its rows were enriched
+under (``{table: RefTable.version}`` as of the computing job's snapshot).
+The manifest persists per-segment lineage so ``recover()`` restores it,
+and the repair scheduler compares it against current table versions to
+find stale rows.  Repairs are in-place upserts with a conditional index
+check (``repair_rows``): a row is only remapped if its index entry still
+points at the scanned position, so a concurrent ingest upsert always wins
+and re-scans are idempotent — exactly-once repair under live ingestion.
+Global row positions are stable (append-only; flush moves bytes, never
+positions), which is what makes (start_row, rows) a durable unit identity.
 """
 
 from __future__ import annotations
@@ -18,51 +33,135 @@ import json
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import nputil
+
+Lineage = Dict[str, int]          # ref table name -> version enriched under
+
+
+def merge_lineage(lineages: List[Optional[Lineage]]) -> Lineage:
+    """Combine chunk lineages into one segment lineage, per-table **min**
+    (oldest wins): conservative for staleness — a merged segment is checked
+    against the oldest version any of its rows might carry.  A ``None``
+    (unversioned) member or a table missing from any member drops the
+    table, which the repair scheduler treats as always-stale."""
+    if not lineages or any(lin is None for lin in lineages):
+        return {}
+    tables = set(lineages[0])
+    for lin in lineages[1:]:
+        tables &= set(lin)
+    return {t: min(lin[t] for lin in lineages) for t in tables}
+
+
+class _PkIndex:
+    """Sorted-array primary-key index: pk -> latest global row.
+
+    Replaces the former dict + per-row Python loops on the hot storage
+    path: membership is one ``np.searchsorted`` probe over the batch
+    (``nputil.sorted_find``), updates are a bulk in-place overwrite plus
+    one ``np.insert`` merge (O(index) memmove in C, amortized fine at
+    segment scale)."""
+
+    __slots__ = ("_pks", "_rows")
+
+    def __init__(self):
+        self._pks = np.empty(0, np.int64)
+        self._rows = np.empty(0, np.int64)
+
+    def __len__(self) -> int:
+        return int(self._pks.shape[0])
+
+    def contains(self, ids: np.ndarray) -> np.ndarray:
+        return nputil.sorted_find(self._pks,
+                                  np.asarray(ids, np.int64))[0]
+
+    def lookup(self, ids: np.ndarray) -> np.ndarray:
+        """Latest global row per id, -1 where absent."""
+        ids = np.asarray(ids, np.int64)
+        found, loc, _ = nputil.sorted_find(self._pks, ids)
+        out = np.full(ids.shape[0], -1, np.int64)
+        out[found] = self._rows[loc[found]]
+        return out
+
+    def get(self, pk: int) -> Optional[int]:
+        row = self.lookup(np.asarray([pk], np.int64))[0]
+        return None if row < 0 else int(row)
+
+    def put(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        """Map each id to its row; within the batch the LAST occurrence
+        wins (matches append order: later rows supersede earlier)."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        uniq, last = nputil.keep_last(ids)
+        rows_u = np.asarray(rows, np.int64)[last]
+        found, loc, pos = nputil.sorted_find(self._pks, uniq)
+        self._rows[loc[found]] = rows_u[found]
+        new = ~found
+        if new.any():
+            self._pks = np.insert(self._pks, pos[new], uniq[new])
+            self._rows = np.insert(self._rows, pos[new], rows_u[new])
+
 
 class StoragePartition:
+    # deferred-durability window for repair's lineage advances: the
+    # manifest rewrite (JSON + rename, under the partition lock) happens
+    # at most once per this many seconds outside of flushes — a crash in
+    # the window only regresses lineage to an OLDER version, which the
+    # repair scheduler treats as stale and safely re-probes
+    LINEAGE_SYNC_S = 1.0
+
     def __init__(self, pid: int, spill_dir: Optional[str] = None,
                  segment_rows: int = 100_000):
         self.pid = pid
         self.spill_dir = spill_dir
         self.segment_rows = segment_rows
         self._chunks: List[Dict[str, np.ndarray]] = []
+        self._chunk_lineage: List[Optional[Lineage]] = []
         self._rows_buffered = 0
-        self._index: Dict[int, int] = {}    # pk -> global row (latest wins)
+        self._index = _PkIndex()     # pk -> global row (latest wins)
         self._rows_total = 0
         self._segments = 0
-        self._lock = threading.Lock()
+        self._seg_rows: List[int] = []
+        self._seg_lineage: List[Lineage] = []
+        self._manifest_dirty = False
+        self._manifest_last_s = float("-inf")   # first lineage write is
+        self._lock = threading.Lock()           # immediate, then throttled
         if spill_dir:
             os.makedirs(os.path.join(spill_dir, f"p{pid}"), exist_ok=True)
 
-    def insert(self, batch: Dict[str, np.ndarray], upsert: bool) -> int:
+    def insert(self, batch: Dict[str, np.ndarray], upsert: bool,
+               lineage: Optional[Lineage] = None) -> int:
         """Insert valid rows; returns #rows newly stored (duplicates skipped
-        in insert mode, remapped in upsert mode)."""
+        in insert mode, remapped in upsert mode).  ``lineage`` is the ref
+        versions the batch was enriched under, recorded per chunk."""
         valid = batch["valid"]
-        ids = batch["id"][valid]
+        ids = np.asarray(batch["id"][valid], np.int64)
         if ids.size == 0:
             return 0
         with self._lock:
-            fresh_mask = np.fromiter(
-                (int(i) not in self._index for i in ids), bool, len(ids))
+            fresh_mask = ~self._index.contains(ids)
             take = np.ones(len(ids), bool) if upsert else fresh_mask
             if not take.any():
                 return 0
             rows = {k: v[valid][take] for k, v in batch.items()}
-            base = self._rows_total
-            for j, pk in enumerate(ids[take]):
-                self._index[int(pk)] = base + j
             n = int(take.sum())
-            self._chunks.append(rows)
-            self._rows_buffered += n
-            self._rows_total += n
-            stored_new = int((fresh_mask & take).sum())
-            if self.spill_dir and self._rows_buffered >= self.segment_rows:
-                self._flush_locked()
-            return stored_new
+            base = self._rows_total
+            self._index.put(ids[take], np.arange(base, base + n))
+            self._append_locked(rows, n, lineage)
+            return int((fresh_mask & take).sum())
+
+    def _append_locked(self, rows: Dict[str, np.ndarray], n: int,
+                       lineage: Optional[Lineage]) -> None:
+        self._chunks.append(rows)
+        self._chunk_lineage.append(dict(lineage) if lineage else None)
+        self._rows_buffered += n
+        self._rows_total += n
+        if self.spill_dir and self._rows_buffered >= self.segment_rows:
+            self._flush_locked()
 
     def _flush_locked(self) -> None:
         if not self._chunks:
@@ -75,30 +174,202 @@ class StoragePartition:
         with open(tmp, "wb") as f:  # file handle: savez won't append ".npz"
             np.savez_compressed(f, **seg)
         os.replace(tmp, path)       # atomic commit
+        self._segments += 1
+        self._seg_rows.append(int(seg["id"].shape[0]))
+        self._seg_lineage.append(merge_lineage(self._chunk_lineage))
+        self._write_manifest_locked()
+        self._chunks = []
+        self._chunk_lineage = []
+        self._rows_buffered = 0
+
+    def _write_manifest_locked(self) -> None:
         man = os.path.join(self.spill_dir, f"p{self.pid}", "MANIFEST.json")
-        manifest = {"segments": self._segments + 1,
-                    "rows": self._rows_total - self._rows_buffered
-                    + int(seg["id"].shape[0])}
+        manifest = {"segments": self._segments,
+                    "rows": int(sum(self._seg_rows)),
+                    "seg_rows": self._seg_rows,
+                    "lineage": self._seg_lineage}
         with open(man + ".tmp", "w") as f:
             json.dump(manifest, f)
         os.replace(man + ".tmp", man)
-        self._segments += 1
-        self._chunks = []
-        self._rows_buffered = 0
+        self._manifest_dirty = False
+        self._manifest_last_s = time.monotonic()
+
+    def _lineage_sync_locked(self) -> None:
+        """Durability for a lineage-only manifest change, throttled: repair
+        advances segment lineage far more often than segments flush, and a
+        JSON rewrite under the partition lock would stall concurrent
+        ingest inserts — so at most one rewrite per LINEAGE_SYNC_S, the
+        rest deferred to the next flush/sync (a crash in the window just
+        re-probes: lineage only ever regresses to OLDER = stale = safe)."""
+        if time.monotonic() - self._manifest_last_s >= self.LINEAGE_SYNC_S:
+            self._write_manifest_locked()
+        else:
+            self._manifest_dirty = True
 
     def flush(self) -> None:
         if self.spill_dir:
             with self._lock:
                 self._flush_locked()
+                if self._manifest_dirty:
+                    self._write_manifest_locked()
+
+    def recover(self) -> "StoragePartition":
+        """Crash recovery: reload the manifested (durable) segments —
+        counts, pk index, and per-segment lineage; unflushed buffered
+        chunks are, by definition, lost.  Pre-lineage manifests recover
+        with empty lineage (treated always-stale by the repair scheduler:
+        safe, since repair is idempotent)."""
+        if not self.spill_dir:
+            raise RuntimeError("recover() requires spill_dir")
+        with self._lock:
+            self._chunks, self._chunk_lineage = [], []
+            self._rows_buffered = 0
+            self._index = _PkIndex()
+            self._segments, self._rows_total = 0, 0
+            self._seg_rows, self._seg_lineage = [], []
+            man = os.path.join(self.spill_dir, f"p{self.pid}",
+                               "MANIFEST.json")
+            if not os.path.exists(man):
+                return self
+            with open(man) as f:
+                manifest = json.load(f)
+            nseg = int(manifest["segments"])
+            lineage = manifest.get("lineage") or []
+            row = 0
+            for s in range(nseg):
+                seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
+                                           f"seg{s:06d}.npz"))
+                n = int(seg["id"].shape[0])
+                self._index.put(np.asarray(seg["id"], np.int64),
+                                np.arange(row, row + n))
+                self._seg_rows.append(n)
+                self._seg_lineage.append(
+                    dict(lineage[s]) if s < len(lineage) else {})
+                row += n
+            self._segments = nseg
+            self._rows_total = row
+        return self
+
+    # -------------------------------------------------------------- lineage
+    def lineage_units(self) -> List[Tuple[int, int, Lineage]]:
+        """Snapshot of storage units for the repair scheduler: a list of
+        ``(start_row, rows, lineage)`` covering flushed segments then
+        buffered chunks, in global row order.  Unversioned chunks surface
+        as ``{}`` (always stale when consulted)."""
+        with self._lock:
+            units: List[Tuple[int, int, Lineage]] = []
+            cum = 0
+            for r, lin in zip(self._seg_rows, self._seg_lineage):
+                units.append((cum, r, dict(lin)))
+                cum += r
+            for c, lin in zip(self._chunks, self._chunk_lineage):
+                r = int(c["id"].shape[0])
+                units.append((cum, r, dict(lin) if lin else {}))
+                cum += r
+            return units
+
+    def update_lineage(self, start_row: int, rows: int,
+                       lineage: Lineage) -> bool:
+        """Advance one unit's lineage (per-table max) after the repair
+        scheduler proved its rows current — e.g. a dirty-key probe matched
+        nothing.  No-op (returns False) when the unit boundary no longer
+        exists (it was flushed and merged into a segment mid-scan): the
+        merged segment keeps its conservative min-lineage and is simply
+        re-scanned, which the conditional repair path makes idempotent."""
+        with self._lock:
+            cum = 0
+            for i, r in enumerate(self._seg_rows):
+                if cum == start_row and r == rows:
+                    self._seg_lineage[i] = {
+                        t: max(self._seg_lineage[i].get(t, -1), v)
+                        for t, v in lineage.items()}
+                    self._lineage_sync_locked()
+                    return True
+                cum += r
+            for i, c in enumerate(self._chunks):
+                r = int(c["id"].shape[0])
+                if cum == start_row and r == rows:
+                    old = self._chunk_lineage[i] or {}
+                    self._chunk_lineage[i] = {
+                        t: max(old.get(t, -1), v)
+                        for t, v in lineage.items()}
+                    return True
+                cum += r
+            return False
+
+    def read_rows(self, start: int, n: int) -> Dict[str, np.ndarray]:
+        """Columns for global rows [start, start+n) — from disk segments
+        and/or buffered chunks.  Positions are append-stable, so a unit
+        snapshot stays readable across a concurrent flush."""
+        with self._lock:
+            seg_rows = list(self._seg_rows)
+            chunks = list(self._chunks)
+        parts: List[Dict[str, np.ndarray]] = []
+        end = start + n
+        cum = 0
+        for s, r in enumerate(seg_rows):
+            lo, hi = cum, cum + r
+            cum += r
+            if hi <= start or lo >= end:
+                continue
+            seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
+                                       f"seg{s:06d}.npz"))
+            a, b = max(start - lo, 0), min(end, hi) - lo
+            parts.append({k: seg[k][a:b] for k in seg.files})
+        for c in chunks:
+            r = int(c["id"].shape[0])
+            lo, hi = cum, cum + r
+            cum += r
+            if hi <= start or lo >= end:
+                continue
+            a, b = max(start - lo, 0), min(end, hi) - lo
+            parts.append({k: v[a:b] for k, v in c.items()})
+        if not parts:
+            raise IndexError(f"rows [{start}, {end}) out of range")
+        if len(parts) == 1:
+            return parts[0]
+        return {k: np.concatenate([p[k] for p in parts])
+                for k in parts[0]}
+
+    def repair_rows(self, batch: Dict[str, np.ndarray],
+                    global_rows: np.ndarray,
+                    lineage: Optional[Lineage]) -> int:
+        """In-place upsert of re-enriched rows, exactly-once under
+        concurrent ingestion: a row is applied only if the pk index still
+        points at the global row it was scanned from — a concurrent ingest
+        upsert (which remapped the pk) always wins, and a repeated scan of
+        the same unit is a no-op.  Returns #rows actually repaired."""
+        ids = np.asarray(batch["id"], np.int64)
+        if ids.size == 0:
+            return 0
+        with self._lock:
+            live = self._index.lookup(ids) == np.asarray(global_rows,
+                                                         np.int64)
+            if not live.any():
+                return 0
+            rows = {k: v[live] for k, v in batch.items()}
+            n = int(live.sum())
+            base = self._rows_total
+            self._index.put(ids[live], np.arange(base, base + n))
+            self._append_locked(rows, n, lineage)
+            return n
 
     @property
     def count(self) -> int:
         with self._lock:
             return len(self._index)
 
+    @property
+    def rows_total(self) -> int:
+        """All appended rows, including logically superseded versions."""
+        with self._lock:
+            return self._rows_total
+
     def scan(self):
         """Yield buffered column chunks (analytical-query surface; flushed
-        segments are read back from disk)."""
+        segments are read back from disk).  Superseded row versions still
+        appear — in global row order, so 'latest occurrence wins' resolves
+        them exactly like the pk index does."""
         with self._lock:
             chunks = list(self._chunks)
             nseg = self._segments
@@ -140,8 +411,8 @@ class StorageJob:
     Partition Holder feeds this through an active holder — see feed.py)."""
 
     def __init__(self, num_partitions: int, spill_dir: Optional[str] = None,
-                 upsert: bool = False):
-        self.partitions = [StoragePartition(i, spill_dir)
+                 upsert: bool = False, segment_rows: int = 100_000):
+        self.partitions = [StoragePartition(i, spill_dir, segment_rows)
                            for i in range(num_partitions)]
         self.upsert = upsert
         self.stored = 0
@@ -149,11 +420,13 @@ class StorageJob:
         self.write_s = 0.0
         self._lock = threading.Lock()
 
-    def write(self, batch: Dict[str, np.ndarray]) -> int:
+    def write(self, batch: Dict[str, np.ndarray],
+              lineage: Optional[Lineage] = None) -> int:
         """Hash-partition one enriched batch by primary key and insert.
         The batch may be shared with other sinks of the same plan (tee
         fan-out): treated as read-only — rows are masked into fresh arrays,
-        never mutated in place."""
+        never mutated in place.  ``lineage`` is the ref-version tuple the
+        batch was enriched under (recorded per stored chunk)."""
         t0 = time.perf_counter()
         npart = len(self.partitions)
         part = (batch["id"] % npart).astype(np.int64)
@@ -164,7 +437,7 @@ class StorageJob:
                 continue
             sub = {k: v[m] for k, v in batch.items()}
             sub["valid"] = np.ones(int(m.sum()), bool)
-            stored += self.partitions[p].insert(sub, self.upsert)
+            stored += self.partitions[p].insert(sub, self.upsert, lineage)
         with self._lock:
             self.stored += stored
             self.batches += 1
@@ -185,3 +458,8 @@ class StorageJob:
     def flush(self) -> None:
         for p in self.partitions:
             p.flush()
+
+    def recover(self) -> "StorageJob":
+        for p in self.partitions:
+            p.recover()
+        return self

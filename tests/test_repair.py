@@ -1,0 +1,498 @@
+"""Progressive re-enrichment (core/repair.py): lineage capture on the
+plan path, compile-time preconditions, the repair scheduler's control
+surface (staleness, dirty-key refinement, budget, backlog yield,
+exactly-once under supersession), executable reuse from the predeploy
+cache, and the end-to-end convergence guarantee under concurrent
+ingestion.
+
+Deliberately hypothesis-free: runs in the minimal-install CI job.  A
+module-level pytest-timeout bounds the thread-heavy tests.
+"""
+
+import threading
+import time
+import warnings
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputingRunner, ComputingSpec, FeedConfig,
+                        FeedManager, PlanError, RefStore, RepairJob,
+                        RepairSpec, StorageJob, SyntheticAdapter, pipeline)
+from repro.core.enrich import queries as Q
+from repro.core.records import SyntheticTweets, parse_json_lines
+
+pytestmark = pytest.mark.timeout(180)
+
+
+def make_manager(scale=0.002):
+    store = RefStore()
+    Q.make_reference_tables(store, scale=scale, seed=7)
+    return FeedManager(store)
+
+
+def q1_plan(mgr, total=0, batch=50, name="rp", refresh=None, **store_kw):
+    p = (pipeline(SyntheticAdapter(total=total, frame_size=batch, seed=3),
+                  name)
+         .parse(batch_size=batch)
+         .options(num_partitions=2)
+         .enrich(Q.Q1)
+         .store(refresh=refresh, **store_kw))
+    return p.compile(mgr.refstore)
+
+
+def seed_storage(mgr, plan, nrows, seed=3, nparts=2, upsert=False):
+    """Materialize a store the way the feed would: enrich through a runner
+    sharing the manager's predeploy cache, write with lineage."""
+    runner = ComputingRunner(ComputingSpec(plan.udf, plan.batch_size),
+                             mgr.refstore, mgr.predeploy)
+    storage = StorageJob(nparts, upsert=upsert)
+    for frame in SyntheticTweets(seed=seed).batches(nrows, plan.batch_size):
+        out = runner.run(frame)
+        storage.write(plan.restrict(out), lineage=runner.last_versions)
+    return storage
+
+
+def safety_table(mgr):
+    snap = mgr.refstore["safety_levels"].snapshot()
+    a = snap.arrays
+    return {int(k): int(v) for k, v in
+            zip(a["key"][:snap.size], a["safety_level"][:snap.size])}
+
+
+def stored_rows(storage):
+    """{pk: row} with latest-occurrence-wins (global row order)."""
+    rows = {}
+    for c in storage.scan():
+        for i in range(c["id"].shape[0]):
+            rows[int(c["id"][i])] = {k: c[k][i] for k in c}
+    return rows
+
+
+def assert_store_current(mgr, storage):
+    """Every stored row's safety_level equals a from-scratch enrichment
+    under the CURRENT reference snapshot (bitwise: exact int compare)."""
+    table = safety_table(mgr)
+    rows = stored_rows(storage)
+    assert rows, "empty store"
+    for pk, row in rows.items():
+        assert int(row["safety_level"]) == table.get(int(row["country"]),
+                                                     -1), pk
+
+
+# ---------------------------------------------------------------------------
+# spec + compile-time preconditions
+# ---------------------------------------------------------------------------
+
+def test_repair_spec_validation():
+    with pytest.raises(ValueError):
+        RepairSpec(budget_rows_s=0)
+    with pytest.raises(ValueError):
+        RepairSpec(max_lag_s=-1)
+    with pytest.raises(ValueError):
+        RepairSpec(interval_s=0)
+    with pytest.raises(ValueError):
+        RepairSpec(yield_backlog_batches=-0.5)
+
+
+def test_store_refresh_accepts_kwargs_dict():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh={"budget_rows_s": 1234.0})
+    assert plan.store_spec.refresh.budget_rows_s == 1234.0
+    with pytest.raises(PlanError, match="invalid refresh spec"):
+        q1_plan(mgr, refresh={"nope": 1})
+    with pytest.raises(PlanError, match="RepairSpec or dict"):
+        q1_plan(mgr, refresh=42)
+
+
+def test_refresh_requires_enrich_stage():
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "r")
+         .parse(batch_size=50).store(refresh=RepairSpec()))
+    with pytest.raises(PlanError, match="at least one enrich stage"):
+        p.compile(mgr.refstore)
+
+
+def test_refresh_rejects_per_record_model():
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=8), "r")
+         .parse(batch_size=8, model="per_record")
+         .enrich(Q.Q1).store(refresh=RepairSpec()))
+    with pytest.raises(PlanError, match="per_record"):
+        p.compile(mgr.refstore)
+
+
+def test_refresh_rejects_stream_model():
+    """Stream feeds enrich with feed-lifetime state but lineage records
+    per-batch snapshot versions — stale-state rows would be tagged fresh
+    and never repaired, so the combination is a compile error."""
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "r")
+         .parse(batch_size=50, model="stream")
+         .enrich(Q.Q2).store(refresh=RepairSpec()))
+    with pytest.raises(PlanError, match="stream"):
+        p.compile(mgr.refstore)
+
+
+def test_lag_samples_bounded():
+    from repro.core.repair import RepairStats
+    st = RepairStats()
+    for i in range(RepairStats.MAX_LAG_SAMPLES + 10):
+        st.add_lag(float(i))
+    assert len(st.lag_samples) <= RepairStats.MAX_LAG_SAMPLES
+    assert st.lag_samples[-1] == float(RepairStats.MAX_LAG_SAMPLES + 9)
+
+
+def test_clean_pass_cannot_swallow_racing_upsert():
+    """Regression: a ref write landing between step()'s version read and
+    its clean-pass bookkeeping must leave the scheduler armed (the flag
+    is cleared BEFORE the scan, so the racing listener re-sets it)."""
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec())
+    storage = seed_storage(mgr, plan, 100)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    assert job.step(force=True) == 0            # clean pass: flag cleared
+    assert not job._maybe_stale
+    mgr.refstore["safety_levels"].upsert(       # listener re-arms
+        np.arange(10, dtype=np.int64),
+        safety_level=np.full(10, 2, np.int32))
+    assert job._maybe_stale
+    while not job.converged():
+        job.step(force=True)
+    assert_store_current(mgr, storage)
+    job.stop()
+
+
+def test_reftable_upsert_vectorized_semantics():
+    """The vectorized upsert must keep the old sequential semantics:
+    replace-on-existing, insert-on-new, last duplicate wins, capacity
+    enforced before any mutation."""
+    t = RefStore().create("t", 4, {"v": np.int32})
+    t.upsert(np.array([7, 3, 7], np.int64),
+             v=np.array([70, 30, 71], np.int32))
+    assert len(t) == 2
+    snap = t.snapshot()
+    got = {int(k): int(v) for k, v in
+           zip(snap.arrays["key"][:snap.size], snap.arrays["v"][:snap.size])}
+    assert got == {3: 30, 7: 71}                # last duplicate won
+    t.upsert(np.array([3, 9], np.int64), v=np.array([31, 90], np.int32))
+    snap = t.snapshot()
+    got = {int(k): int(v) for k, v in
+           zip(snap.arrays["key"][:snap.size], snap.arrays["v"][:snap.size])}
+    assert got == {3: 31, 7: 71, 9: 90}
+    with pytest.raises(RuntimeError, match="over capacity"):
+        t.upsert(np.array([10, 11], np.int64),
+                 v=np.array([1, 2], np.int32))
+    assert len(t) == 3                          # rejected atomically
+
+
+def test_refresh_rejects_multi_group_plans():
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "r")
+         .parse(batch_size=50)
+         .enrich(Q.Q1).enrich(Q.Q2, partitions=2)
+         .store(refresh=RepairSpec()))
+    with pytest.raises(PlanError, match="single stage group"):
+        p.compile(mgr.refstore)
+
+
+def test_refresh_requires_schema_columns_stored():
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "r")
+         .parse(batch_size=50).enrich(Q.Q1)
+         .project("safety_level")
+         .store(refresh=RepairSpec()))
+    with pytest.raises(PlanError, match="every input schema column"):
+        p.compile(mgr.refstore)
+    # projecting the full schema + outputs is fine
+    from repro.core.records import TWEET_SCHEMA
+    p2 = (pipeline(SyntheticAdapter(total=0, frame_size=50), "r2")
+          .parse(batch_size=50).enrich(Q.Q1)
+          .project("safety_level", *TWEET_SCHEMA)
+          .store(refresh=RepairSpec()))
+    assert p2.compile(mgr.refstore).store_spec.refresh is not None
+
+
+# ---------------------------------------------------------------------------
+# lineage capture on the plan path
+# ---------------------------------------------------------------------------
+
+def test_plan_feed_records_lineage_per_chunk():
+    mgr = make_manager()
+    plan = q1_plan(mgr, total=500)
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+    assert stats.stored == 500
+    v = mgr.refstore["safety_levels"].version
+    units = [u for p in h.storage.partitions for u in p.lineage_units()]
+    assert units
+    for _, _, lin in units:
+        assert lin == {"safety_levels": v}
+
+
+# ---------------------------------------------------------------------------
+# the scheduler, synchronously (thread never started)
+# ---------------------------------------------------------------------------
+
+def test_step_repairs_stale_rows_to_convergence():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec())
+    storage = seed_storage(mgr, plan, 200)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    assert job.converged()
+    t = mgr.refstore["safety_levels"]
+    keys = np.arange(10, dtype=np.int64)        # existing keys 0..9
+    t.upsert(keys, safety_level=np.full(10, 4, np.int32))
+    assert not job.converged()
+    while not job.converged():
+        assert job.step(force=True) >= 0
+    assert_store_current(mgr, storage)
+    assert job.stats.repaired_rows > 0
+    assert job.stats.repaired_rows == job.stats.stale_rows
+    assert storage.count == 200                 # exactly-once: no dups
+    assert job.stats.repair_lag_p95_s >= job.stats.repair_lag_p50_s > 0
+    # a further step is a no-op
+    assert job.step(force=True) == 0
+    job.stop()
+
+
+def test_dirty_key_probe_refines_untouched_units():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec())
+    storage = seed_storage(mgr, plan, 40)       # few rows: sparse countries
+    present = {int(c) for r in stored_rows(storage).values()
+               for c in [r["country"]]}
+    absent = next(k for k in range(100) if k not in present)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    mgr.refstore["safety_levels"].upsert(
+        np.asarray([absent], np.int64),
+        safety_level=np.asarray([2], np.int32))
+    before = {pk: int(r["safety_level"])
+              for pk, r in stored_rows(storage).items()}
+    assert job.step(force=True) == 0
+    assert job.converged()
+    assert job.stats.units_refined == job.stats.units_scanned > 0
+    assert job.stats.repaired_rows == 0
+    assert job.stats.repair_invocations == 0    # zero enrichment work
+    assert {pk: int(r["safety_level"])
+            for pk, r in stored_rows(storage).items()} == before
+    job.stop()
+
+
+def test_repair_reuses_predeployed_executable():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec())
+    storage = seed_storage(mgr, plan, 200)      # warms apply:q1 @ (50,)
+    name = f"apply:{plan.udf.name}"
+    compiles = mgr.predeploy.by_name[name]["compiles"]
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    mgr.refstore["safety_levels"].upsert(      # existing keys: no resize
+        np.arange(5, dtype=np.int64),
+        safety_level=np.full(5, 1, np.int32))
+    while not job.converged():
+        job.step(force=True)
+    assert job.stats.repair_invocations > 0
+    assert mgr.predeploy.by_name[name]["compiles"] == compiles
+    job.stop()
+
+
+def test_budget_paces_repair():
+    mgr = make_manager()
+    # 1 row/s with a 1-row bucket: one 50-row unit overdraws the bucket
+    # for ~49s — a budgeted second step must do nothing
+    spec = RepairSpec(budget_rows_s=1.0, burst_s=1.0)
+    plan = q1_plan(mgr, refresh=spec)
+    storage = seed_storage(mgr, plan, 500, nparts=1)   # 50-row units
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    mgr.refstore["safety_levels"].upsert(
+        np.arange(100, dtype=np.int64),                # every country dirty
+        safety_level=np.full(100, 3, np.int32))
+    job.step()                                         # budgeted step
+    assert job.stats.units_scanned == 1                # one unit, then broke
+    job.step()                                         # bucket overdrawn
+    assert job.stats.units_scanned == 1
+    assert not job.converged()                         # work remains
+    while not job.converged():
+        job.step(force=True)                           # drain ignores budget
+    assert_store_current(mgr, storage)
+    job.stop()
+
+
+def test_repair_yields_to_ingestion_backlog():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec())
+    storage = seed_storage(mgr, plan, 100)
+    backlog = [(plan.batch_size * 10, 0)]
+    holder = SimpleNamespace(backlog=lambda: backlog[0])
+    handle = SimpleNamespace(
+        _live_workers=1,
+        stage_groups=[SimpleNamespace(holders=[holder], elastic=None)])
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy,
+                    handle=handle)
+    mgr.refstore["safety_levels"].upsert(
+        np.arange(100, dtype=np.int64),
+        safety_level=np.full(100, 3, np.int32))
+    assert job.step() == 0                      # backlogged: yield
+    assert job.stats.yields == 1
+    assert job.stats.units_scanned == 0
+    backlog[0] = (0, 0)                         # feed caught up
+    assert job.step() > 0
+    handle._live_workers = 0                    # feed done: never yields
+    backlog[0] = (plan.batch_size * 10, 0)
+    job.step()
+    assert job.stats.yields == 1
+    job.stop()
+
+
+def test_max_lag_slo_overrides_backlog_yield():
+    """While the oldest pending ref change is younger than max_lag_s,
+    repair defers to backlog; once older, it stops yielding (freshness
+    SLO) — the row budget still bounds how hard it competes."""
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec(max_lag_s=0.05))
+    storage = seed_storage(mgr, plan, 100)
+    holder = SimpleNamespace(backlog=lambda: (plan.batch_size * 10, 0))
+    handle = SimpleNamespace(
+        _live_workers=1,
+        stage_groups=[SimpleNamespace(holders=[holder], elastic=None)])
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy,
+                    handle=handle)
+    mgr.refstore["safety_levels"].upsert(
+        np.arange(100, dtype=np.int64),
+        safety_level=np.full(100, 3, np.int32))
+    assert job.step() == 0                      # young staleness: yield
+    assert job.stats.yields == 1
+    time.sleep(0.08)                            # SLO breached
+    assert job.step() > 0                       # repairs despite backlog
+    while not job.converged():
+        job.step(force=True)
+    assert_store_current(mgr, storage)
+    job.stop()
+
+
+def test_concurrent_ingest_upsert_supersedes_repair():
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec(), upsert=True)
+    storage = seed_storage(mgr, plan, 50, nparts=1, upsert=True)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    mgr.refstore["safety_levels"].upsert(       # all countries dirty
+        np.arange(100, dtype=np.int64),
+        safety_level=np.full(100, 7, np.int32))
+    # "concurrent" ingestion re-delivers the same pks, enriched under the
+    # NEW versions, before the repair scheduler gets to the old unit
+    runner = ComputingRunner(ComputingSpec(plan.udf, plan.batch_size),
+                             mgr.refstore, mgr.predeploy)
+    for frame in SyntheticTweets(seed=3).batches(50, plan.batch_size):
+        out = runner.run(frame)
+        storage.write(plan.restrict(out), lineage=runner.last_versions)
+    while not job.converged():
+        job.step(force=True)
+    assert job.stats.superseded_rows > 0        # ingest won those rows
+    assert storage.count == 50
+    assert_store_current(mgr, storage)
+    job.stop()
+
+
+def test_coarse_repair_without_repair_keys_stateful_stage():
+    """Q2 declares no repair_keys: staleness stays coarse (whole unit
+    re-enriched) and the group-by STATE is rebuilt at the new version."""
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "q2rp")
+         .parse(batch_size=50).options(num_partitions=2)
+         .enrich(Q.Q2).store(refresh=RepairSpec()))
+    plan = p.compile(mgr.refstore)
+    storage = seed_storage(mgr, plan, 150)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    t = mgr.refstore["religious_populations"]
+    t.upsert(np.asarray([0, 1], np.int64),
+             country=np.asarray([3, 3], np.int32),
+             religion=np.asarray([1, 2], np.int32),
+             population=np.asarray([10_000, 20_000], np.int32))
+    while not job.converged():
+        job.step(force=True)
+    assert job.stats.refined_rows == 0          # coarse: nothing refined
+    assert job.stats.repaired_rows > 0
+    # bitwise: stored rows equal a from-scratch run under the new snapshot
+    fresh = ComputingRunner(ComputingSpec(plan.udf, plan.batch_size),
+                            mgr.refstore, mgr.predeploy)
+    want = {}
+    for frame in SyntheticTweets(seed=3).batches(150, plan.batch_size):
+        out = fresh.run(frame)
+        for i in range(int(out["valid"].sum())):
+            want[int(out["id"][i])] = int(out["religious_population"][i])
+    got = {pk: int(r["religious_population"])
+           for pk, r in stored_rows(storage).items()}
+    assert got == want
+    job.stop()
+
+
+# ---------------------------------------------------------------------------
+# end to end: convergence under concurrent ingestion
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_repair_converges_under_concurrent_ingestion():
+    """The acceptance scenario: ingest N rows, upsert a subset of ref keys
+    mid-feed, keep ingesting — join() must hand back a store that is
+    bitwise equal to a from-scratch re-enrichment under the final
+    snapshot, with no lost or duplicated rows and exactly-once upserts."""
+    mgr = make_manager()
+    total, batch = 3000, 100
+    p = (pipeline(SyntheticAdapter(total=total, frame_size=batch, seed=3,
+                                   rate=4000.0), "e2e-repair")
+         .parse(batch_size=batch)
+         .options(num_partitions=2)
+         .enrich(Q.Q1)
+         .store(refresh=RepairSpec(budget_rows_s=100_000)))
+    h = mgr.submit(p)
+    time.sleep(0.25)                            # some rows stored & stale-able
+    t = mgr.refstore["safety_levels"]
+    t.upsert(np.arange(30, dtype=np.int64),     # existing keys: no resize
+             safety_level=np.full(30, 9, np.int32))
+    time.sleep(0.25)
+    t.upsert(np.arange(30, 60, dtype=np.int64),
+             safety_level=np.full(30, 8, np.int32))
+    stats = h.join(timeout=120)
+    assert stats.records_in == total
+    assert stats.stored == total                # nothing lost
+    assert h.storage.count == total             # nothing duplicated
+    assert h.repair is not None and h.repair.converged()
+    assert_store_current(mgr, h.storage)        # bitwise vs from-scratch
+    assert stats.repaired_rows > 0
+    assert stats.repair is not None
+    assert stats.stale_rows == stats.repair.stale_rows
+    assert stats.repair_lag_p95_s >= stats.repair_lag_p50_s > 0.0
+
+
+def test_feed_without_refresh_has_no_repair_job():
+    mgr = make_manager()
+    h = mgr.submit(q1_plan(mgr, total=200))
+    stats = h.join(timeout=120)
+    assert h.repair is None
+    assert stats.repair is None and stats.repaired_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# shim deprecation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_feedconfig_start_shim_warns_plan_submit_does_not():
+    mgr = make_manager()
+    cfg = FeedConfig(name="dep", udf=Q.Q1, batch_size=50, num_partitions=1)
+    with pytest.warns(DeprecationWarning, match="compatibility shim"):
+        h = mgr.start(cfg, SyntheticAdapter(total=100, frame_size=50))
+    assert h.join(timeout=120).stored == 100
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        h2 = mgr.submit(q1_plan(mgr, total=100, name="dep2"))
+        assert h2.join(timeout=120).stored == 100
+
+
+def test_baseline_frameworks_do_not_warn():
+    mgr = make_manager()
+    cfg = FeedConfig(name="base", udf=Q.Q1, batch_size=50,
+                     num_partitions=1, framework="balanced")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        h = mgr.start(cfg, SyntheticAdapter(total=100, frame_size=50))
+        assert h.join(timeout=120).stored == 100
