@@ -16,10 +16,10 @@ import csv
 import io
 import sys
 import time
-import warnings
 from typing import Dict, List
 
-from repro.core import FeedConfig, FeedManager, RefStore, SyntheticAdapter
+from repro.core import (FeedConfig, FeedManager, RefStore,
+                        SyntheticAdapter, pipeline)
 from repro.core.enrich import queries as Q
 from repro.kernels import DISPATCH_MODES, set_dispatch_mode
 
@@ -72,17 +72,24 @@ def run_feed(mgr: FeedManager, name: str, total: int, batch: int,
              model: str = "per_batch", refresh: str = "always",
              coalesce_rows=None):
     """coalesce_rows=None is the production default (auto: on for the
-    decoupled framework); pass 0 for exact-invocation comparisons."""
-    cfg = FeedConfig(name=name, udf=udf, batch_size=batch,
-                     num_partitions=partitions, framework=framework,
-                     model=model, refresh=refresh,
-                     coalesce_rows=coalesce_rows)
-    with warnings.catch_warnings():
-        # the benchmark rigs use the FeedConfig shim ON PURPOSE (identical
-        # measurement path across frameworks) — don't spam the CSV logs
-        warnings.simplefilter("ignore", DeprecationWarning)
-        h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=batch,
-                                            seed=11))
+    decoupled framework); pass 0 for exact-invocation comparisons.
+    framework="new" builds a plan (the shim lowering is gone); the
+    coupled/insert baselines keep their cfg-driven measurement rigs."""
+    adapter = SyntheticAdapter(total=total, frame_size=batch, seed=11)
+    if framework == "new":
+        p = (pipeline(adapter, name)
+             .parse(batch_size=batch, model=model, refresh=refresh)
+             .options(num_partitions=partitions,
+                      coalesce_rows=coalesce_rows))
+        if udf is not None:
+            p.enrich(udf)
+        h = mgr.submit(p.store())
+    else:
+        cfg = FeedConfig(name=name, udf=udf, batch_size=batch,
+                         num_partitions=partitions, framework=framework,
+                         model=model, refresh=refresh,
+                         coalesce_rows=coalesce_rows)
+        h = mgr.start(cfg, adapter)
     stats = h.join(timeout=1200)
     assert stats.stored == total, (name, stats.stored, total)
     return stats

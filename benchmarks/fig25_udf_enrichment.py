@@ -39,7 +39,6 @@ from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,7 @@ from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
                                add_dispatch_arg, emit, make_manager,
                                run_feed, set_dispatch)
 from repro.core import (ComputingRunner, ComputingSpec, ElasticSpec,
-                        FeedConfig, SyntheticAdapter, pipeline)
+                        SyntheticAdapter, pipeline)
 from repro.core.enrich import dispatch as D
 from repro.core.enrich import ops
 from repro.core.intake import Adapter
@@ -289,14 +288,13 @@ def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
     frames = list(src.batches(bl_total, batch))
     for label, coal in (("off", 0), ("auto", None)):
         for rnd in ("warmup", "steady"):
-            cfg = FeedConfig(name=f"f25-backlog-{label}-{rnd}", udf=Q.Q1,
-                             batch_size=batch, num_partitions=2,
-                             coalesce_rows=coal, holder_capacity=32)
-            with warnings.catch_warnings():
-                # intentional shim use: the coalescer A/B predates plans
-                warnings.simplefilter("ignore", DeprecationWarning)
-                h = mgr.start(cfg, ReplayAdapter(frames))
-            s = h.join(timeout=1200)
+            p = (pipeline(ReplayAdapter(frames),
+                          f"f25-backlog-{label}-{rnd}")
+                 .parse(batch_size=batch)
+                 .options(num_partitions=2, coalesce_rows=coal,
+                          holder_capacity=32)
+                 .enrich(Q.Q1).store())
+            s = mgr.submit(p).join(timeout=1200)
             assert s.stored == bl_total, (s.stored, bl_total)
         emit(FIG, f"backlog_coalesce_{label}", s.records_per_s, "rec/s",
              f"replayed stream x{bl_total} rows, warm predeploy; "

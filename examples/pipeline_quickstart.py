@@ -1,6 +1,7 @@
 """Declarative plan-API quickstart: chained enrichment, filter, projection,
-multi-sink fan-out, per-stage elasticity, and progressive re-enrichment
-(ref updates repairing stored rows in place) in one ingestion pass.
+multi-sink fan-out, per-stage elasticity, progressive re-enrichment
+(ref updates repairing stored rows in place), and analytical queries over
+the enriched store — ingest, repair, and query in one pass.
 
 The SQL++ this models (paper Figures 8/12, extended):
 
@@ -27,8 +28,8 @@ import time
 
 import numpy as np
 
-from repro.core import (ElasticSpec, FeedManager, RefStore, RepairSpec,
-                        SyntheticAdapter, pipeline)
+from repro.core import (CompactionSpec, ElasticSpec, FeedManager, RefStore,
+                        RepairSpec, SyntheticAdapter, agg, col, pipeline)
 from repro.core.enrich import queries as Q
 
 # 1. reference data at (scaled-down) paper cardinalities
@@ -99,13 +100,18 @@ assert stored_cols == ["id", "religious_population", "safety_level",
 #    plan's enrich stages over exactly the affected rows (dirty-key probe)
 #    in ingestion's idle gaps — join() drains it to convergence, so the
 #    store below is guaranteed current against the FINAL table state.
+#    `compact=CompactionSpec(...)` additionally attaches a budgeted
+#    background compactor that reclaims the superseded row versions
+#    upserts and repair leave behind (zone maps — per-segment min/max for
+#    the query pruning below — are on by default at flush).
 repair_plan = (pipeline(SyntheticAdapter(total=10_000, frame_size=420,
                                          seed=2, rate=40_000.0),
                         "RepairDemo")
                .parse(batch_size=420)
                .options(num_partitions=1)
                .enrich(Q.Q1)
-               .store(refresh=RepairSpec(budget_rows_s=10_000)))
+               .store(refresh=RepairSpec(budget_rows_s=10_000),
+                      compact=CompactionSpec(budget_rows_s=100_000)))
 feed2 = mgr.submit(repair_plan)
 time.sleep(0.1)                             # some rows land, then go stale
 table = store["safety_levels"]
@@ -130,3 +136,37 @@ assert len(rows) == 10_000
 for country, lvl in rows.values():          # every live row is current
     assert lvl == levels.get(country, -1)
 print("repair: store converged to the post-upsert reference snapshot")
+
+# 5. analytical queries over the enriched store (core/query.py) — the
+#    paper's point: enrichments are computed AT ingestion so they can be
+#    queried WITH the data.  The query runs on a pinned snapshot
+#    (consistent even mid-ingestion), prunes segments whose zone maps
+#    prove the predicate can't match, and routes the group-by through the
+#    same kernel-dispatch layer the enrichment UDFs use.
+res = (feed2.query()
+       .where(col("safety_level") >= 3)     # only well-rated countries
+       .group_by("safety_level")
+       .agg(n=agg.count(),
+            top=agg.topk("created_at", k=2, payload="id"))
+       .execute())
+naive = {}
+for country, lvl in rows.values():
+    if lvl >= 3:
+        naive[lvl] = naive.get(lvl, 0) + 1
+assert res["safety_level"].tolist() == sorted(naive)
+assert res["n"].tolist() == [naive[k] for k in sorted(naive)]
+print(f"query: groups={res['safety_level'].tolist()} "
+      f"counts={res['n'].tolist()} "
+      f"(newest-2 tweet ids per level: {res['top'].tolist()}) "
+      f"rows_scanned={res.stats.rows_scanned} in "
+      f"{1e3 * res.stats.wall_s:.1f}ms")
+
+# reclaim the superseded versions repair left behind, then re-query:
+# identical answer over fewer row versions
+dropped = feed2.storage.compact()
+res2 = (feed2.query().where(col("safety_level") >= 3)
+        .group_by("safety_level").agg(n=agg.count()).execute())
+assert res2["n"].tolist() == res["n"].tolist()
+assert feed2.storage.dead_rows == 0
+print(f"compaction: reclaimed {dropped} superseded row versions "
+      f"(scan now touches {res2.stats.rows_scanned} rows)")

@@ -10,14 +10,15 @@ Equivalent of the paper's DDL (Figures 1, 4, 8, 12):
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-(This uses the FeedConfig compatibility shim — one UDF, one sink.  The
-declarative plan API with chained UDFs, filters, projection and multi-sink
-fan-out is examples/pipeline_quickstart.py.)
+(One UDF, one sink — the smallest plan.  Chained UDFs, filters,
+projection, multi-sink fan-out, repair, and the analytical query API are
+examples/pipeline_quickstart.py.)
 """
 
 import numpy as np
 
-from repro.core import FeedConfig, FeedManager, RefStore, SyntheticAdapter
+from repro.core import FeedManager, RefStore, SyntheticAdapter, \
+    col, pipeline
 from repro.core.enrich import queries as Q
 from repro.core.records import hash64
 
@@ -32,9 +33,12 @@ sw.upsert(np.array([0], np.int64),
 
 # 2. create + start the feed with the enrichment UDF attached
 mgr = FeedManager(store)
-cfg = FeedConfig(name="TweetFeed", udf=Q.UDF2, batch_size=420,
-                 num_partitions=2)
-feed = mgr.start(cfg, SyntheticAdapter(total=10_000, frame_size=420))
+feed = mgr.submit(
+    pipeline(SyntheticAdapter(total=10_000, frame_size=420), "TweetFeed")
+    .parse(batch_size=420)
+    .options(num_partitions=2)
+    .enrich(Q.UDF2)
+    .store())
 
 # 3. mid-ingestion UPSERT: add a new sensitive keyword for country 3.
 #    Batches picked up after this point see it immediately (Model 2);
@@ -45,10 +49,10 @@ sw.upsert(np.array([1], np.int64),
 
 stats = feed.join()
 
-# 4. "analytical query" over the enriched dataset:
+# 4. analytical query over the enriched dataset (core/query.py):
 #    SELECT count(*) FROM EnrichedTweets WHERE safety_check_flag = "Red"
-red = sum(int((chunk["safety_check_flag"] != 0).sum())
-          for chunk in feed.storage.scan())
+red = feed.query().where(col("safety_check_flag") != 0) \
+    .select("id").execute().rows
 
 print(f"ingested={stats.records_in} stored={stats.stored} "
       f"red_flagged={red}")

@@ -3,6 +3,11 @@ framework — intake / computing / storage jobs, partition holders,
 parameterized predeployed (AOT-compiled) computing jobs, versioned
 reference data, and the Q1-Q7 enrichment-UDF workload."""
 
+from repro.core.compaction import (  # noqa: F401
+    CompactionJob,
+    CompactionSpec,
+    CompactionStats,
+)
 from repro.core.computing import (  # noqa: F401
     ComputingRunner,
     ComputingSpec,
@@ -37,6 +42,15 @@ from repro.core.partition_holder import (  # noqa: F401
     StopRecord,
 )
 from repro.core.predeploy import PredeployCache  # noqa: F401
+from repro.core.query import (  # noqa: F401
+    Query,
+    QueryError,
+    QueryResult,
+    QueryStats,
+    StoreSnapshot,
+    agg,
+    col,
+)
 from repro.core.repair import (  # noqa: F401
     RepairJob,
     RepairSpec,

@@ -29,9 +29,10 @@ The reference-table operand is NOT bucketed here: snapshots are already
 shape-stable (fixed capacity, trim-quantized in computing.py) and the
 kernels pad the reference block internally.
 
-``segment_topk`` has no Pallas kernel yet (the composite-key argsort in
-ops.py is already a single XLA sort); it is routed for API completeness and
-always takes the reference path.
+``segment_topk`` routes to the tournament-selection kernel
+(kernels/segment_topk) inside its segment-count/k envelope — the
+query subsystem's group-by top-k lives there — and to the composite-key
+XLA sort outside it (Q3's 50K-segment state build).
 
 Fused UDF chains (core/plan.py) trace every stage's operators into ONE
 predeployed executable, so a chained Q1->Q2->Q3 plan pays one dispatch per
@@ -55,6 +56,7 @@ from repro.kernels import (dispatch_mode,  # noqa: F401  (re-export: scoped
                            get_dispatch_mode, resolve_use_pallas)
 from repro.kernels.hash_probe import ops as hp_ops
 from repro.kernels.segment_reduce import ops as sr_ops
+from repro.kernels.segment_topk import ops as st_ops
 from repro.kernels.spatial_join import ops as sj_ops
 
 Array = jax.Array
@@ -65,6 +67,13 @@ class DispatchConfig:
     min_pallas_rows: int = 1024   # "auto": below this the jnp path wins
     bucket_min: int = 512         # smallest probe bucket
     bucket_max: int = 1 << 22     # cap: beyond this, chunk upstream
+    # segment_topk kernel envelope: its (k_pad, S_pad) winner tables and
+    # the (block, S_pad) one-hot tile live in VMEM, and its work is
+    # O(k*R) vs the reference sort's O(R log R) — route to the kernel
+    # only inside these bounds (Q3's 50K-country top-3 stays on the
+    # reference sort; query-layer group-bys land inside)
+    topk_max_segments: int = 2048
+    topk_max_k: int = 16
 
 
 _config = DispatchConfig()
@@ -74,13 +83,19 @@ _bucket_hits: Dict[Tuple[str, int], int] = {}
 
 def configure(min_pallas_rows: Optional[int] = None,
               bucket_min: Optional[int] = None,
-              bucket_max: Optional[int] = None) -> DispatchConfig:
+              bucket_max: Optional[int] = None,
+              topk_max_segments: Optional[int] = None,
+              topk_max_k: Optional[int] = None) -> DispatchConfig:
     if min_pallas_rows is not None:
         _config.min_pallas_rows = min_pallas_rows
     if bucket_min is not None:
         _config.bucket_min = bucket_min
     if bucket_max is not None:
         _config.bucket_max = bucket_max
+    if topk_max_segments is not None:
+        _config.topk_max_segments = topk_max_segments
+    if topk_max_k is not None:
+        _config.topk_max_k = topk_max_k
     return _config
 
 
@@ -226,8 +241,39 @@ def segment_count(seg: Array, num_segments: int,
 def segment_topk(values: Array, seg: Array, payload: Array,
                  num_segments: int, k: int,
                  valid: Optional[Array] = None) -> Tuple[Array, Array]:
-    """No Pallas kernel yet — one composite-key XLA sort is already a
-    single fused op; routed here so call sites stay dispatch-uniform."""
+    """Per-segment top-k by ``values`` desc (ties: row asc), returning
+    ((S, k) payload -1-filled, (S, k) values 0-filled).  Kernel path: the
+    tournament-selection kernel (kernels/segment_topk) picks winner ROW
+    indices; payload/value gathers happen out here so any payload dtype
+    rides along.  Falls back to the composite-key-sort reference outside
+    the kernel's segment/k envelope or for 64-bit values (the winner
+    table ranks in int32)."""
+    r = values.shape[0]
     from repro.core.enrich import ops
-    return ops._segment_topk_ref(values, seg, payload, num_segments, k,
-                                 valid)
+    if (r == 0 or not _use_pallas(r) or num_segments < 1
+            or num_segments > _config.topk_max_segments
+            or k > _config.topk_max_k
+            # the winner table ranks in int32: anything that does not
+            # embed losslessly (64-bit, unsigned >= 2^31, floats) takes
+            # the composite-sort reference
+            or not jnp.issubdtype(values.dtype, jnp.signedinteger)
+            or jnp.dtype(values.dtype).itemsize > 4):
+        return ops._segment_topk_ref(values, seg, payload, num_segments,
+                                     k, valid)
+    rk = bucket_rows(r)
+    _note("segment_topk", rk)
+    segi = seg.astype(jnp.int32)
+    if valid is not None:
+        # invalid rows route to the dropped overflow segment
+        segi = jnp.where(valid, segi, num_segments)
+    vals_p = jnp.pad(values.astype(jnp.int32), (0, rk - r))
+    seg_p = jnp.pad(segi, (0, rk - r), constant_values=num_segments)
+    idx = st_ops.segment_topk_idx(vals_p, seg_p, num_segments, k,
+                                  use_pallas=True)        # (S, k) rows
+    found = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    pay = jnp.where(found, jnp.take(payload, safe, axis=0),
+                    jnp.asarray(-1, payload.dtype))
+    val = jnp.where(found, jnp.take(values, safe, axis=0),
+                    jnp.asarray(0, values.dtype))
+    return pay, val

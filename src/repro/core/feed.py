@@ -25,22 +25,20 @@ drain and finish partial batches, the sink holders close after the last
 worker.  Completed feeds deregister from the manager (name + holder IDs
 become reusable).
 
-**Compatibility shim:** ``FeedManager.start(FeedConfig(...), adapter)`` is
-the pre-plan API, kept as a thin layer that builds a one-stage plan (one
-``udf`` slot, one sink) and submits it.  New call sites should build plans;
-``FeedConfig`` gains no new features and its direct-execution path is gone
-— deprecation path: shim today, emit ``DeprecationWarning`` once the
-benchmarks/drivers migrate, remove after the scale-out PRs stop exercising
-it.  The paper-baseline frameworks stay cfg-only (they are measurement
-rigs, not plans):
+**Baselines:** ``FeedManager.start(FeedConfig(...), adapter)`` is now the
+entry point for the paper-baseline measurement rigs ONLY; the deprecated
+framework="new" shim lowering was removed once every driver migrated to
+plans (``FeedConfig`` survives as the internal runtime config a compiled
+plan lowers onto).  The baseline frameworks stay cfg-only (they are
+measurement rigs, not plans):
 
   framework="current"   coupled single job, single parsing node, Model-3
                         state (AsterixDB data feeds with a Java UDF)
   framework="balanced"  coupled, parsing divided over all nodes
   framework="insert"    Approach 1: repeated INSERT statements — every
                         batch pays query compilation (no predeploy cache)
-  framework="new"       this paper: decoupled + predeployed + Model 2
-                        (lowered onto the plan path)
+  framework="new"       this paper: decoupled + predeployed + Model 2 —
+                        plan-only; ``start`` rejects it
 
 Fault tolerance: per-invocation retry with exponential backoff; failed
 frames are re-enqueued (at-least-once) and the idempotent storage job makes
@@ -79,13 +77,13 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.core import records
+from repro.core.compaction import CompactionJob, CompactionStats
 from repro.core.computing import ComputingRunner, ComputingSpec, \
     ComputingStats
 from repro.core.elasticity import ElasticityController, ElasticSpec
@@ -96,7 +94,7 @@ from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolderManager, STOP,
                                          StopRecord, frame_bytes,
                                          frame_rows)
-from repro.core.plan import IngestPlan, Pipeline, StageGroup, pipeline
+from repro.core.plan import IngestPlan, Pipeline, StageGroup
 from repro.core.predeploy import PredeployCache
 from repro.core.refdata import RefStore
 from repro.core.repair import RepairJob, RepairStats
@@ -136,14 +134,15 @@ class _StoreBatch:
 
 @dataclasses.dataclass
 class FeedConfig:
-    """Compatibility shim over the plan API (core/plan.py).
+    """Runtime feed configuration.
 
-    Historically the whole public surface: one ``udf`` slot, one sink.
-    ``FeedManager.start`` now lowers a framework="new" FeedConfig onto a
-    one-stage ``IngestPlan`` and submits it; multi-stage chains, filters,
-    projections and multi-sink tees are plan-only.  Deprecation path: this
-    shim stays source-compatible for existing tests/benchmarks; new code
-    should use ``pipeline(...)``/``FeedManager.submit``."""
+    Historically the whole public surface (one ``udf`` slot, one sink) and
+    once a ``start``-time shim over the plan API; the shim lowering is
+    gone.  Today it serves two roles: the internal config a compiled
+    ``IngestPlan`` lowers onto in ``FeedManager.submit``, and the driver
+    config of the paper-baseline measurement rigs
+    (framework="current"/"balanced"/"insert" via ``FeedManager.start``).
+    Decoupled feeds are built with ``pipeline(...)``/``submit``."""
     name: str = "feed"
     udf: Optional[EnrichUDF] = None
     batch_size: int = 420                 # the paper's 1X
@@ -218,6 +217,10 @@ class FeedStats:
     repair_lag_p95_s: float = 0.0
     repair_drain_s: float = 0.0
     repair: Optional[RepairStats] = None
+    # background segment compaction (core/compaction.py): space reclaimed
+    # from superseded/deleted row versions while the feed ran
+    compacted_rows: int = 0
+    compaction: Optional[CompactionStats] = None
 
     @property
     def records_per_s(self) -> float:
@@ -286,6 +289,7 @@ class FeedHandle:
         self._store_sink_idx: Optional[int] = None
         self.storage_holder: Optional[ActivePartitionHolder] = None
         self.repair: Optional[RepairJob] = None
+        self.compaction: Optional[CompactionJob] = None
         self.stats = FeedStats()
         self._t0 = 0.0
         self._lock = threading.Lock()
@@ -339,10 +343,19 @@ class FeedHandle:
                 self.repair.finish(timeout)
                 if self.repair.error is not None:
                     raise self.repair.error
+            if self.compaction is not None and not self._finalized:
+                # stop (no forced drain: compaction is an optimization —
+                # callers wanting a fully-reclaimed store call
+                # handle.compaction.drain() / storage.compact() first)
+                self.compaction.finish(timeout)
+                if self.compaction.error is not None:
+                    raise self.compaction.error
             self._finalize()
         finally:
             if self.repair is not None:
                 self.repair.stop()      # idempotent; error paths too
+            if self.compaction is not None:
+                self.compaction.stop()
             self._deregister()
         return self.stats
 
@@ -381,6 +394,9 @@ class FeedHandle:
             self.stats.repair_lag_p50_s = r.repair_lag_p50_s
             self.stats.repair_lag_p95_s = r.repair_lag_p95_s
             self.stats.repair_drain_s = r.drain_s
+        if self.compaction is not None:
+            self.stats.compaction = self.compaction.stats
+            self.stats.compacted_rows = self.compaction.stats.rows_dropped
         self.stats.predeploy = self.manager.predeploy.stats()
 
     def _deregister(self) -> None:
@@ -406,6 +422,19 @@ class FeedHandle:
             hm.unregister(h.holder_id)
         if self.manager.feeds.get(self.cfg.name) is self:
             del self.manager.feeds[self.cfg.name]
+
+    # --------------------------------------------------------------- queries
+    def query(self):
+        """Analytical queries over the feed's column store (core/query.py):
+        ``handle.query().where(col(...) >= v).group_by(k).agg(...)
+        .execute()``.  Snapshot-consistent, so it is safe — and the point —
+        to call while the feed is still ingesting and repair/compaction
+        are churning rows."""
+        if self.storage is None:
+            raise RuntimeError(
+                "feed has no store sink: end the plan with .store(...) to "
+                "get a queryable column store")
+        return self.storage.query()
 
     # ------------------------------------------------------------ elasticity
     def scale_up(self, extra_partitions: int, stage: int = 0) -> int:
@@ -706,41 +735,21 @@ class FeedManager:
         self._start_new(cfg, handle, plan)
         return handle
 
-    # ----------------------------------------------------------- start shim
+    # ------------------------------------------------- baseline entry point
     def start(self, cfg: FeedConfig, adapter: Adapter) -> FeedHandle:
-        """Compatibility shim: a framework="new" FeedConfig is lowered onto
-        a one-stage plan and submitted; the coupled/insert baselines keep
-        their dedicated measurement paths (they are rigs, not deprecated).
-        The drivers (train/data_feed.py, the examples) are on the plan API
-        now, so the shim path warns per the ROADMAP deprecation plan."""
+        """Entry point for the paper-baseline measurement rigs ONLY
+        (framework "current"/"balanced"/"insert" — fixed cfg-driven
+        pipelines the figures compare against).  The deprecated
+        framework="new" lowering is gone: decoupled feeds are built with
+        ``pipeline(adapter).parse(...)....store()/.tee(...)`` and
+        ``submit`` (FeedConfig survives as the internal runtime config a
+        compiled plan lowers onto)."""
         if cfg.framework == "new":
-            warnings.warn(
-                "FeedConfig/FeedManager.start is a compatibility shim over "
-                "the plan API and will be removed: build the feed with "
-                "pipeline(adapter).parse(...)....store()/.tee(...) and "
-                "FeedManager.submit instead",
-                DeprecationWarning, stacklevel=2)
-            p = (pipeline(adapter, cfg.name)
-                 .parse(cfg.batch_size, cfg.model, cfg.refresh)
-                 .options(num_partitions=cfg.num_partitions,
-                          holder_capacity=cfg.holder_capacity,
-                          work_stealing=cfg.work_stealing,
-                          max_retries=cfg.max_retries,
-                          retry_backoff_s=cfg.retry_backoff_s,
-                          coalesce_rows=cfg.coalesce_rows,
-                          coalesce_bytes=cfg.coalesce_bytes,
-                          fault_hook=cfg.fault_hook,
-                          elastic=cfg.elastic))
-            if cfg.udf is not None:
-                p.enrich(cfg.udf)
-            if cfg.sink is not None:
-                # pre-plan semantics: the sink REPLACES the storage job
-                p.tee(cfg.sink, name="sink")
-            else:
-                p.store(partitions=cfg.storage_partitions or
-                        cfg.num_partitions,
-                        spill_dir=cfg.spill_dir, upsert=cfg.upsert)
-            return self.submit(p)
+            raise ValueError(
+                "FeedManager.start no longer lowers framework='new' "
+                "FeedConfigs (the deprecated shim was removed): build the "
+                "feed with pipeline(adapter).parse(...)....store()/"
+                ".tee(...) and FeedManager.submit instead")
 
         if cfg.name in self.feeds:
             raise KeyError(f"feed {cfg.name} already active")
@@ -767,7 +776,9 @@ class FeedManager:
                 nstore = spec.store.partitions or cfg.num_partitions
                 handle.storage = StorageJob(nstore, spec.store.spill_dir,
                                             spec.store.upsert,
-                                            spec.store.segment_rows)
+                                            spec.store.segment_rows,
+                                            spec.store.zone_map_cols,
+                                            spec.store.sort_key)
                 handle._store_sink_idx = i
                 consumer = _store_consumer(handle.storage)
             else:
@@ -822,6 +833,13 @@ class FeedManager:
             handle.repair = RepairJob(plan, handle.storage, self.refstore,
                                       self.predeploy, handle=handle)
             handle.repair.start()
+        if store_spec is not None and store_spec.compact is not None:
+            # background space reclaim: budgeted, yields to ingestion the
+            # same way repair does (core/compaction.py)
+            handle.compaction = CompactionJob(
+                handle.storage, store_spec.compact, cfg.batch_size,
+                handle=handle, name=cfg.name)
+            handle.compaction.start()
 
     # ------------------------------------------------- coupled baselines
     def _start_coupled(self, cfg: FeedConfig, handle: FeedHandle,

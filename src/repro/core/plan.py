@@ -46,6 +46,7 @@ import jax
 import numpy as np
 
 from repro.core import records
+from repro.core.compaction import CompactionSpec
 from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
@@ -62,12 +63,24 @@ class StoreSpec:
     """The storage-job sink (partitioned column store, see storage.py).
     ``refresh`` attaches a progressive re-enrichment policy: a background
     ``RepairJob`` (core/repair.py) keeps the stored rows' enrichments
-    current as reference tables are upserted mid- and post-ingestion."""
+    current as reference tables are upserted mid- and post-ingestion.
+
+    Read-side layout (core/query.py consumes these — INGESTBASE-style
+    ingestion-time decisions the analytical scan path exploits):
+    ``zone_map_cols`` picks the columns whose per-segment min/max is
+    persisted at flush for predicate pruning (None = every eligible 1-D
+    numeric column; () disables); ``sort_key`` clusters each flushed
+    segment by that column.  ``compact`` attaches a budgeted background
+    ``CompactionJob`` (core/compaction.py) reclaiming superseded/deleted
+    row versions as upserts and repair churn the store."""
     partitions: int = 0            # 0 -> plan.num_partitions
     spill_dir: Optional[str] = None
     upsert: bool = False
     segment_rows: int = 100_000
     refresh: Optional[RepairSpec] = None
+    zone_map_cols: Optional[Tuple[str, ...]] = None
+    sort_key: Optional[str] = None
+    compact: Optional[CompactionSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +135,18 @@ def _coerce_repair(value) -> Optional[RepairSpec]:
             raise PlanError(f"invalid refresh spec {value!r}: {e}") from e
     raise PlanError(f"store(refresh=...) takes a RepairSpec or dict, got "
                     f"{type(value).__name__}")
+
+
+def _coerce_compact(value) -> Optional[CompactionSpec]:
+    if value is None or isinstance(value, CompactionSpec):
+        return value
+    if isinstance(value, dict):
+        try:
+            return CompactionSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid compact spec {value!r}: {e}") from e
+    raise PlanError(f"store(compact=...) takes a CompactionSpec or dict, "
+                    f"got {type(value).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,14 +269,22 @@ class Pipeline:
 
     def store(self, partitions: int = 0, spill_dir: Optional[str] = None,
               upsert: bool = False, segment_rows: int = 100_000,
-              refresh=None) -> "Pipeline":
-        """The column-store sink.  ``refresh=RepairSpec(...)`` (or a kwargs
+              refresh=None, zone_map_cols: Optional[Tuple[str, ...]] = None,
+              sort_key: Optional[str] = None, compact=None) -> "Pipeline":
+        """The column-store sink; at runtime ``FeedHandle.query()`` (or
+        ``handle.storage.query()``) opens the analytical query subsystem
+        over it (core/query.py).  ``refresh=RepairSpec(...)`` (or a kwargs
         dict) enables progressive re-enrichment: a background repair job
         re-runs the plan's enrich stages over stored rows whose ref-version
-        lineage went stale (see core/repair.py)."""
-        self._stages.append(("store", StoreSpec(partitions, spill_dir,
-                                                upsert, segment_rows,
-                                                _coerce_repair(refresh))))
+        lineage went stale (see core/repair.py).  ``zone_map_cols``/
+        ``sort_key`` are the read-side layout knobs and ``compact=
+        CompactionSpec(...)`` the background space-reclaim policy — see
+        ``StoreSpec``."""
+        self._stages.append(("store", StoreSpec(
+            partitions, spill_dir, upsert, segment_rows,
+            _coerce_repair(refresh),
+            tuple(zone_map_cols) if zone_map_cols is not None else None,
+            sort_key, _coerce_compact(compact))))
         return self
 
     # -------------------------------------------------------------- compile
@@ -287,6 +320,7 @@ class Pipeline:
                     f"[{g.elastic.min_partitions}, "
                     f"{g.elastic.max_partitions}]")
         self._check_repair(fused, sinks, project_cols, groups)
+        self._check_store(sinks, delivered)
         return IngestPlan(
             name=self._name, adapter=self._adapter, udf=fused,
             stage_names=tuple(u.name for u in (
@@ -366,6 +400,24 @@ class Pipeline:
                     f"store(refresh=...) needs every input schema column "
                     f"stored so rows can be re-enriched from scratch; "
                     f"project() drops {missing}")
+
+    def _check_store(self, sinks, delivered) -> None:
+        """Read-side layout knobs must name columns the store will actually
+        receive — caught here, not as silently-absent zone maps or an
+        unsorted 'sorted' store mid-feed."""
+        spec = next((s.store for s in sinks if s.is_store), None)
+        if spec is None:
+            return
+        unknown = [c for c in (spec.zone_map_cols or ())
+                   if c not in delivered]
+        if unknown:
+            raise PlanError(
+                f"store(zone_map_cols=...) references column(s) {unknown} "
+                f"the store never receives; available: {sorted(delivered)}")
+        if spec.sort_key is not None and spec.sort_key not in delivered:
+            raise PlanError(
+                f"store(sort_key={spec.sort_key!r}) is not a stored "
+                f"column; available: {sorted(delivered)}")
 
     # -------------------------------------------------------------- helpers
     def _split_stages(self):

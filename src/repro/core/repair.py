@@ -41,10 +41,18 @@ Four pieces:
     refined row counts and ``repair_lag`` p50/p95 (ref upsert -> repaired
     row), surfaced through ``FeedStats`` and the fig_repair benchmark.
 
-Semantics notes: filters are re-evaluated during repair, but a stored row
-that a filter would now reject is *kept* (counted ``invalidated_rows``) —
-repair upgrades enrichments, it does not retroactively delete; superseded
-row versions accumulate append-only until segment compaction exists.
+Semantics notes: filters are re-evaluated during repair, and a stored row
+the re-evaluated filter now rejects is **deleted** from the store
+(``StoragePartition.delete_rows`` — the same conditional index check as
+``repair_rows``, so a concurrent ingest upsert always wins and re-scans
+are no-ops; counted ``invalidated_rows``/``deleted_rows``).  Superseded
+and deleted row versions accumulate append-only until compaction
+(core/compaction.py) reclaims them; repair coordinates with compaction
+through the partition's **layout epoch** — a unit's epoch is captured
+with its scan and passed back to every conditional write, so a compaction
+that renumbered the position space mid-repair rejects the batch instead
+of letting a reused position number spuriously match (the unit stays
+stale and is simply re-scanned).
 """
 
 from __future__ import annotations
@@ -104,7 +112,8 @@ class RepairStats:
     repaired_rows: int = 0       # rows actually upserted in place
     superseded_rows: int = 0     # skipped: a concurrent ingest upsert won
     refined_rows: int = 0        # skipped via dirty-key probe refinement
-    invalidated_rows: int = 0    # re-run filter rejected; old row kept
+    invalidated_rows: int = 0    # re-run filter rejected the stored row
+    deleted_rows: int = 0        # ... and the conditional delete applied
     units_scanned: int = 0
     units_refined: int = 0       # advanced lineage without re-enriching
     repair_invocations: int = 0  # predeployed apply calls issued
@@ -136,6 +145,26 @@ class RepairStats:
     @property
     def repair_lag_p95_s(self) -> float:
         return self._lag_q(0.95)
+
+
+def feed_busy(handle, per_part_rows: float) -> bool:
+    """The yield test the background maintenance jobs share (repair here,
+    compaction in core/compaction.py): True while the feed's computing
+    workers have real ingestion backlog above ``per_part_rows`` queued
+    rows per partition, or any elastic group is scaled above its floor
+    (the controller judged the feed busy) — ingestion is the primary job;
+    background work takes the idle gaps."""
+    if handle is None or handle._live_workers <= 0:
+        return False                 # feed drained: nobody to yield to
+    for g in list(handle.stage_groups):
+        holders = list(g.holders)
+        rows = sum(hh.backlog()[0] for hh in holders)
+        if rows > per_part_rows * max(1, len(holders)):   # 0-threshold:
+            return True                                   # any backlog
+        if g.elastic is not None and \
+                len(holders) > g.elastic.min_partitions:
+            return True
+    return False
 
 
 class _RefEvent(NamedTuple):
@@ -256,29 +285,20 @@ class RepairJob(threading.Thread):
         self.refstore.unsubscribe(self._tables, self._on_change)
 
     def _should_yield(self) -> bool:
-        """Repair is the background job: defer while the feed's computing
-        workers have real backlog to chew through, or while any elastic
-        group is scaled above its floor (the controller judged the feed
-        busy) — the composition contract with core/elasticity.py."""
+        """Repair is the background job: defer while the feed is busy
+        (``feed_busy`` — the contract shared with core/elasticity.py and
+        the compaction job), unless the staleness SLO is breached."""
         h = self.handle
-        if h is None or h._live_workers <= 0:
-            return False             # feed drained: nobody to yield to
+        if h is None:
+            return False
         oldest = self._oldest_pending
         if oldest is not None and \
                 time.monotonic() - oldest > self.spec.max_lag_s:
             # staleness SLO breached: stop deferring to ingestion (the
             # row budget still bounds how hard repair competes)
             return False
-        per_part = self.spec.yield_backlog_batches * self.plan.batch_size
-        for g in list(h.stage_groups):
-            holders = list(g.holders)
-            rows = sum(hh.backlog()[0] for hh in holders)
-            if rows > per_part * max(1, len(holders)):   # 0-threshold: any
-                return True                              # backlog defers
-            if g.elastic is not None and \
-                    len(holders) > g.elastic.min_partitions:
-                return True
-        return False
+        return feed_busy(
+            h, self.spec.yield_backlog_batches * self.plan.batch_size)
 
     def _refill(self, now: float) -> None:
         cap = self.spec.budget_rows_s * self.spec.burst_s
@@ -358,7 +378,21 @@ class RepairJob(threading.Thread):
     # ------------------------------------------------------------- repair
     def _repair_unit(self, part, start: int, n: int, lin: Lineage,
                      versions: Lineage, since: float) -> int:
-        batch = part.read_rows(start, n)
+        # layout-epoch capture: every conditional write below carries this
+        # epoch, so a compaction that renumbers the position space between
+        # the scan and the write rejects the batch (position numbers freed
+        # by a shrink are reused by later appends — without the epoch a
+        # stale positional check could spuriously match).  The rejected
+        # unit keeps its old lineage, stays stale, and is re-scanned.
+        epoch = part.epoch
+        try:
+            batch = part.read_rows(start, n)
+        except IndexError:
+            return 0          # compaction shrank the partition mid-scan
+        if int(batch["id"].shape[0]) != n:
+            # the unit list predates a compaction: the span now covers
+            # fewer rows.  Skip — the next step re-lists current units.
+            return 0
         self.stats.units_scanned += 1
         stale_tables = [t for t in self._tables
                         if lin.get(t, -1) < versions[t]]
@@ -381,7 +415,7 @@ class RepairJob(threading.Thread):
         elif not mask.any():
             self.stats.units_refined += 1
             self.stats.refined_rows += n
-            part.update_lineage(start, n, versions)
+            part.update_lineage(start, n, versions, expect_epoch=epoch)
             return 0
         self.stats.stale_rows += int(mask.sum())
         self.stats.refined_rows += int(n - mask.sum())
@@ -399,16 +433,26 @@ class RepairJob(threading.Thread):
             self.stats.repair_invocations += 1
             out = {k: v[:m] for k, v in out.items()}
             keep = np.asarray(out["valid"], bool)
-            self.stats.invalidated_rows += int(m - keep.sum())
+            if not keep.all():
+                # filter-delete: re-enrichment made these stored rows fail
+                # the plan's re-evaluated filter — delete them, with the
+                # same conditional-index exactly-once contract as repair
+                # (a racing ingest upsert wins and the row survives as its
+                # newer version, to be re-scanned)
+                self.stats.invalidated_rows += int(m - keep.sum())
+                self.stats.deleted_rows += part.delete_rows(
+                    np.asarray(sub["id"])[~keep], rows[lo:lo + m][~keep],
+                    expect_epoch=epoch)
             if not keep.any():
                 continue
             fixed = self.plan.restrict({k: v[keep]
                                         for k, v in out.items()})
             fixed["valid"] = np.ones(int(keep.sum()), bool)
-            got = part.repair_rows(fixed, rows[lo:lo + m][keep], versions)
+            got = part.repair_rows(fixed, rows[lo:lo + m][keep], versions,
+                                   expect_epoch=epoch)
             self.stats.superseded_rows += int(keep.sum()) - got
             repaired += got
-        part.update_lineage(start, n, versions)
+        part.update_lineage(start, n, versions, expect_epoch=epoch)
         self.stats.repaired_rows += repaired
         if repaired:
             self.stats.add_lag(max(0.0, time.monotonic() - since))

@@ -14,6 +14,16 @@ Durability: partitions buffer columns in memory and flush immutable
 is set — an LSM-flavored, crash-consistent layout; ``recover()`` reloads
 manifested segments after a crash.
 
+Read side (core/query.py): at flush every segment records **zone maps**
+(per-column min/max, persisted in the manifest, restored by ``recover()``)
+so analytical scans can prune segments a predicate provably cannot match;
+``sort_key`` optionally sorts each segment's rows at flush (an
+ingestion-time layout decision à la INGESTBASE).  ``snapshot_view()``
+returns a pinned, consistent view — the unit list, a copy of the pk index,
+and the row watermark, captured under one lock — that stays readable (old
+segment files are retained) while ingest, repair, and compaction keep
+mutating the partition.
+
 Lineage (core/repair.py): every appended chunk — and, after flush, every
 segment — records the **reference-version lineage** its rows were enriched
 under (``{table: RefTable.version}`` as of the computing job's snapshot).
@@ -23,12 +33,25 @@ find stale rows.  Repairs are in-place upserts with a conditional index
 check (``repair_rows``): a row is only remapped if its index entry still
 points at the scanned position, so a concurrent ingest upsert always wins
 and re-scans are idempotent — exactly-once repair under live ingestion.
-Global row positions are stable (append-only; flush moves bytes, never
-positions), which is what makes (start_row, rows) a durable unit identity.
+
+Compaction (core/compaction.py drives it; the primitives live here):
+superseded and deleted row versions accumulate append-only — tracked
+exactly in per-segment ``dead`` counters — until ``compact_segment`` /
+``compact_chunks`` rewrite a unit without them and rebuild its zone maps.
+Compaction **renumbers** global row positions (the one operation that
+does; sorted flush only permutes within the new segment), so every
+partition carries a **layout epoch**, bumped on each renumbering.  In-
+flight repair captures the epoch with its unit scan and passes it back as
+``expect_epoch`` to ``repair_rows``/``delete_rows``/``update_lineage``:
+after a shrink, freed position numbers are reused by later appends, so a
+stale conditional check could spuriously match — the epoch check closes
+that hole (the rejected unit simply stays stale and is re-scanned).
+Pinned snapshot views keep replaced segment files on disk until released.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
@@ -40,6 +63,8 @@ import numpy as np
 from repro.core import nputil
 
 Lineage = Dict[str, int]          # ref table name -> version enriched under
+
+ZoneMap = Dict[str, Tuple[float, float]]   # column -> (min, max) over a unit
 
 
 def merge_lineage(lineages: List[Optional[Lineage]]) -> Lineage:
@@ -54,6 +79,35 @@ def merge_lineage(lineages: List[Optional[Lineage]]) -> Lineage:
     for lin in lineages[1:]:
         tables &= set(lin)
     return {t: min(lin[t] for lin in lineages) for t in tables}
+
+
+def compute_zone_map(cols: Dict[str, np.ndarray],
+                     zone_map_cols: Optional[Tuple[str, ...]]) -> ZoneMap:
+    """Per-column (min, max) over a unit's rows — the pruning metadata the
+    query subsystem checks predicates against.  ``zone_map_cols=None`` maps
+    every eligible column (1-D numeric; bools and tensor columns like
+    ``text_tokens`` are not range-prunable); ``()`` disables.  Values are
+    plain python numbers so the manifest stays JSON."""
+    out: ZoneMap = {}
+    for k, v in cols.items():
+        if zone_map_cols is not None and k not in zone_map_cols:
+            continue
+        if v.ndim != 1 or v.shape[0] == 0:
+            continue
+        if not np.issubdtype(v.dtype, np.number) or v.dtype == np.bool_:
+            continue
+        if np.issubdtype(v.dtype, np.floating):
+            if np.isnan(v).any():
+                # NaN breaks interval pruning BOTH ways: min/max become
+                # NaN (every maybe() -> False: wrong prunes), and a NaN
+                # row satisfies != even when [min,max] is a single point
+                # (a nan-ignoring interval would wrongly prune that).
+                # No zone map = never pruned = always correct.
+                continue
+            out[k] = (float(v.min()), float(v.max()))
+        else:
+            out[k] = (int(v.min()), int(v.max()))
+    return out
 
 
 class _PkIndex:
@@ -105,6 +159,107 @@ class _PkIndex:
             self._pks = np.insert(self._pks, pos[new], uniq[new])
             self._rows = np.insert(self._rows, pos[new], rows_u[new])
 
+    def remove(self, ids: np.ndarray) -> int:
+        """Drop entries for ``ids`` (absent ids are ignored)."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return 0
+        found, loc, _ = nputil.sorted_find(self._pks, ids)
+        if not found.any():
+            return 0
+        drop = np.unique(loc[found])
+        self._pks = np.delete(self._pks, drop)
+        self._rows = np.delete(self._rows, drop)
+        return int(drop.shape[0])
+
+    def remap_span(self, lo: int, hi: int, new_abs: np.ndarray) -> None:
+        """Rewrite entries pointing into global rows [lo, hi) through
+        ``new_abs`` (old offset -> new absolute row).  Used by sorted flush
+        (permutation) and compaction (shrink)."""
+        m = (self._rows >= lo) & (self._rows < hi)
+        self._rows[m] = new_abs[self._rows[m] - lo]
+
+    def shift_from(self, start: int, delta: int) -> None:
+        """Shift every entry at global row >= ``start`` by ``delta``
+        (compaction moved the suffix of the position space)."""
+        if delta:
+            self._rows[self._rows >= start] += delta
+
+    def snapshot_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self._pks.copy(), self._rows.copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotUnit:
+    """One scannable unit of a partition snapshot: a flushed segment (read
+    from its immutable file) or a buffered chunk (arrays are never mutated
+    after append, so holding the dict is safe)."""
+    base: int                       # first global row (at snapshot time)
+    rows: int
+    path: Optional[str] = None      # segment file; None -> in-memory chunk
+    chunk: Optional[Dict[str, np.ndarray]] = None
+    zone_map: Optional[ZoneMap] = None   # None: not prunable (chunks, legacy)
+
+    def read(self, cols: Optional[Tuple[str, ...]] = None
+             ) -> Dict[str, np.ndarray]:
+        """Columns of this unit; ``cols=None`` reads all.  Segment reads
+        decompress only the requested members (predicate/column pushdown:
+        a pruned column set is an actual IO reduction, not cosmetic)."""
+        if self.chunk is not None:
+            if cols is None:
+                return dict(self.chunk)
+            return {k: self.chunk[k] for k in cols if k in self.chunk}
+        with np.load(self.path) as seg:
+            names = seg.files if cols is None else \
+                [k for k in cols if k in seg.files]
+            return {k: seg[k] for k in names}
+
+
+class PartitionSnapshot:
+    """A consistent, pinned view of one partition: unit list + pk-index
+    copy + row watermark captured under a single lock acquisition.  While
+    pinned, compaction defers deleting replaced segment files, so every
+    unit stays readable.  ``release()`` (or the context manager) unpins."""
+
+    def __init__(self, part: "StoragePartition", units: List[SnapshotUnit],
+                 pks: np.ndarray, rows: np.ndarray, watermark: int,
+                 epoch: int):
+        self._part = part
+        self.units = units
+        self._pks = pks
+        self._rows = rows
+        self.watermark = watermark          # rows_total at snapshot time
+        self.epoch = epoch
+        self._released = False
+
+    @property
+    def pid(self) -> int:
+        return self._part.pid
+
+    def live_mask(self, ids: np.ndarray, base: int) -> np.ndarray:
+        """Latest-wins over superseded/deleted versions: a scanned row is
+        live iff the snapshot's pk index still points at its position."""
+        ids = np.asarray(ids, np.int64)
+        found, loc, _ = nputil.sorted_find(self._pks, ids)
+        cur = np.full(ids.shape[0], -1, np.int64)
+        cur[found] = self._rows[loc[found]]
+        return cur == np.arange(base, base + ids.shape[0])
+
+    @property
+    def live_rows(self) -> int:
+        return int(self._pks.shape[0])
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._part._unpin()
+
+    def __enter__(self) -> "PartitionSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
 
 class StoragePartition:
     # deferred-durability window for repair's lineage advances: the
@@ -115,24 +270,63 @@ class StoragePartition:
     LINEAGE_SYNC_S = 1.0
 
     def __init__(self, pid: int, spill_dir: Optional[str] = None,
-                 segment_rows: int = 100_000):
+                 segment_rows: int = 100_000,
+                 zone_map_cols: Optional[Tuple[str, ...]] = None,
+                 sort_key: Optional[str] = None):
         self.pid = pid
         self.spill_dir = spill_dir
         self.segment_rows = segment_rows
+        # None = zone-map every eligible column; () disables
+        self.zone_map_cols = zone_map_cols
+        # sort each segment's rows by this column at flush (ingestion-time
+        # clustering).  NOTE: with a sort key, scan() order within a
+        # segment is no longer append order — latest-wins resolution must
+        # go through the pk index (snapshot_view), which is remapped with
+        # the permutation and stays exact.
+        self.sort_key = sort_key
         self._chunks: List[Dict[str, np.ndarray]] = []
         self._chunk_lineage: List[Optional[Lineage]] = []
         self._rows_buffered = 0
         self._index = _PkIndex()     # pk -> global row (latest wins)
         self._rows_total = 0
-        self._segments = 0
+        self._seg_seq = 0            # monotonic file-name counter
+        self._seg_files: List[str] = []
         self._seg_rows: List[int] = []
         self._seg_lineage: List[Lineage] = []
+        self._seg_zmaps: List[ZoneMap] = []
+        self._seg_dead: List[int] = []   # superseded/deleted rows/segment
+        self._chunk_dead = 0             # ... among the buffered chunks
+        self._epoch = 0              # layout epoch: bumped by renumbering
+        self._pins = 0               # live snapshot views
+        self._garbage: List[str] = []    # replaced files awaiting unpin
         self._manifest_dirty = False
         self._manifest_last_s = float("-inf")   # first lineage write is
         self._lock = threading.Lock()           # immediate, then throttled
         if spill_dir:
             os.makedirs(os.path.join(spill_dir, f"p{pid}"), exist_ok=True)
 
+    # ------------------------------------------------------------- internals
+    def _seg_path(self, fname: str) -> str:
+        return os.path.join(self.spill_dir, f"p{self.pid}", fname)
+
+    def _flushed_rows_locked(self) -> int:
+        return int(sum(self._seg_rows))
+
+    def _note_dead_locked(self, old_rows: np.ndarray) -> None:
+        """Exact garbage accounting: ``old_rows`` are global positions
+        whose row version just became superseded or deleted."""
+        if old_rows.size == 0:
+            return
+        flushed = self._flushed_rows_locked()
+        seg_side = old_rows[old_rows < flushed]
+        self._chunk_dead += int(old_rows.shape[0] - seg_side.shape[0])
+        if seg_side.size:
+            bounds = np.cumsum(self._seg_rows)
+            seg_of = np.searchsorted(bounds, seg_side, side="right")
+            for s, c in zip(*np.unique(seg_of, return_counts=True)):
+                self._seg_dead[int(s)] += int(c)
+
+    # ---------------------------------------------------------------- writes
     def insert(self, batch: Dict[str, np.ndarray], upsert: bool,
                lineage: Optional[Lineage] = None) -> int:
         """Insert valid rows; returns #rows newly stored (duplicates skipped
@@ -150,6 +344,16 @@ class StoragePartition:
             rows = {k: v[valid][take] for k, v in batch.items()}
             n = int(take.sum())
             base = self._rows_total
+            if upsert:
+                # positions this batch supersedes: previous versions of the
+                # re-written pks (each counted once, however many times the
+                # batch repeats the pk), plus within-batch duplicates — the
+                # index keeps the last occurrence, so earlier copies of the
+                # same pk in this chunk are dead on arrival
+                uniq = np.unique(ids[take])
+                old = self._index.lookup(uniq)
+                self._note_dead_locked(old[old >= 0])
+                self._chunk_dead += n - int(uniq.shape[0])
             self._index.put(ids[take], np.arange(base, base + n))
             self._append_locked(rows, n, lineage)
             return int((fresh_mask & take).sum())
@@ -168,26 +372,50 @@ class StoragePartition:
             return
         seg = {k: np.concatenate([c[k] for c in self._chunks])
                for k in self._chunks[0]}
-        path = os.path.join(self.spill_dir, f"p{self.pid}",
-                            f"seg{self._segments:06d}.npz")
+        n = int(seg["id"].shape[0])
+        lo = self._flushed_rows_locked()
+        if self.sort_key is not None and self.sort_key in seg:
+            order = np.argsort(seg[self.sort_key], kind="stable")
+            if not np.array_equal(order, np.arange(n)):
+                seg = {k: v[order] for k, v in seg.items()}
+                inv = np.empty(n, np.int64)
+                inv[order] = np.arange(n)
+                # pure permutation: positions move within [lo, lo+n) only,
+                # so no epoch bump — a stale conditional check can never
+                # spuriously match (the checked pk's OWN position moved)
+                self._index.remap_span(lo, lo + n, lo + inv)
+        fname = f"seg{self._seg_seq:06d}.npz"
+        self._seg_seq += 1
+        path = self._seg_path(fname)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:  # file handle: savez won't append ".npz"
             np.savez_compressed(f, **seg)
         os.replace(tmp, path)       # atomic commit
-        self._segments += 1
-        self._seg_rows.append(int(seg["id"].shape[0]))
+        self._seg_files.append(fname)
+        self._seg_rows.append(n)
         self._seg_lineage.append(merge_lineage(self._chunk_lineage))
+        self._seg_zmaps.append(compute_zone_map(seg, self.zone_map_cols))
+        # exact recount for the new segment; buffered garbage moved with it
+        live = self._index.lookup(seg["id"]) == np.arange(lo, lo + n)
+        self._seg_dead.append(int(n - live.sum()))
+        self._chunk_dead = 0
         self._write_manifest_locked()
         self._chunks = []
         self._chunk_lineage = []
         self._rows_buffered = 0
 
     def _write_manifest_locked(self) -> None:
-        man = os.path.join(self.spill_dir, f"p{self.pid}", "MANIFEST.json")
-        manifest = {"segments": self._segments,
+        man = self._seg_path("MANIFEST.json")
+        manifest = {"format": 2,
+                    "segments": len(self._seg_files),
                     "rows": int(sum(self._seg_rows)),
+                    "seq": self._seg_seq,
+                    "seg_files": self._seg_files,
                     "seg_rows": self._seg_rows,
-                    "lineage": self._seg_lineage}
+                    "lineage": self._seg_lineage,
+                    "zone_maps": [
+                        {k: [v[0], v[1]] for k, v in zm.items()}
+                        for zm in self._seg_zmaps]}
         with open(man + ".tmp", "w") as f:
             json.dump(manifest, f)
         os.replace(man + ".tmp", man)
@@ -215,40 +443,217 @@ class StoragePartition:
 
     def recover(self) -> "StoragePartition":
         """Crash recovery: reload the manifested (durable) segments —
-        counts, pk index, and per-segment lineage; unflushed buffered
-        chunks are, by definition, lost.  Pre-lineage manifests recover
-        with empty lineage (treated always-stale by the repair scheduler:
-        safe, since repair is idempotent)."""
+        counts, pk index, per-segment lineage, and zone maps; unflushed
+        buffered chunks are, by definition, lost.  Pre-lineage and
+        pre-zone-map manifests recover with empty lineage (always-stale to
+        the repair scheduler) and no zone maps (never pruned) — both the
+        safe side.  Dead-row counters are recomputed exactly from the
+        rebuilt index."""
         if not self.spill_dir:
             raise RuntimeError("recover() requires spill_dir")
         with self._lock:
             self._chunks, self._chunk_lineage = [], []
             self._rows_buffered = 0
+            self._chunk_dead = 0
             self._index = _PkIndex()
-            self._segments, self._rows_total = 0, 0
-            self._seg_rows, self._seg_lineage = [], []
-            man = os.path.join(self.spill_dir, f"p{self.pid}",
-                               "MANIFEST.json")
+            self._rows_total = 0
+            self._seg_files, self._seg_rows = [], []
+            self._seg_lineage, self._seg_zmaps, self._seg_dead = [], [], []
+            man = self._seg_path("MANIFEST.json")
             if not os.path.exists(man):
                 return self
             with open(man) as f:
                 manifest = json.load(f)
             nseg = int(manifest["segments"])
+            files = manifest.get("seg_files") or \
+                [f"seg{s:06d}.npz" for s in range(nseg)]
             lineage = manifest.get("lineage") or []
+            zmaps = manifest.get("zone_maps") or []
+            seg_ids: List[np.ndarray] = []
             row = 0
             for s in range(nseg):
-                seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
-                                           f"seg{s:06d}.npz"))
-                n = int(seg["id"].shape[0])
-                self._index.put(np.asarray(seg["id"], np.int64),
-                                np.arange(row, row + n))
+                with np.load(self._seg_path(files[s])) as seg:
+                    ids = np.asarray(seg["id"], np.int64)
+                n = int(ids.shape[0])
+                self._index.put(ids, np.arange(row, row + n))
+                seg_ids.append(ids)
+                self._seg_files.append(files[s])
                 self._seg_rows.append(n)
                 self._seg_lineage.append(
                     dict(lineage[s]) if s < len(lineage) else {})
+                self._seg_zmaps.append(
+                    {k: (v[0], v[1]) for k, v in zmaps[s].items()}
+                    if s < len(zmaps) else {})
                 row += n
-            self._segments = nseg
+            self._seg_seq = int(manifest.get("seq", nseg))
             self._rows_total = row
+            lo = 0
+            for ids in seg_ids:
+                n = ids.shape[0]
+                live = self._index.lookup(ids) == np.arange(lo, lo + n)
+                self._seg_dead.append(int(n - live.sum()))
+                lo += n
         return self
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot_view(self) -> PartitionSnapshot:
+        """Pin and return a consistent view for the query subsystem: unit
+        list, pk-index copy, and watermark under ONE lock acquisition.
+        Chunks' arrays are immutable after append; segment files replaced
+        by compaction stay on disk until the last pin releases."""
+        with self._lock:
+            self._pins += 1
+            units: List[SnapshotUnit] = []
+            base = 0
+            for f, n, zm in zip(self._seg_files, self._seg_rows,
+                                self._seg_zmaps):
+                units.append(SnapshotUnit(base, n, path=self._seg_path(f),
+                                          zone_map=zm or None))
+                base += n
+            for c in self._chunks:
+                n = int(c["id"].shape[0])
+                units.append(SnapshotUnit(base, n, chunk=c))
+                base += n
+            pks, rows = self._index.snapshot_arrays()
+            return PartitionSnapshot(self, units, pks, rows,
+                                     self._rows_total, self._epoch)
+
+    def _unpin(self) -> None:
+        with self._lock:
+            self._pins -= 1
+            if self._pins == 0:
+                self._gc_locked()
+
+    def _gc_locked(self) -> None:
+        for f in self._garbage:
+            try:
+                os.unlink(f)
+            except OSError:
+                pass
+        self._garbage = []
+
+    # ------------------------------------------------------------ compaction
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    @property
+    def dead_rows(self) -> int:
+        """Superseded/deleted row versions still occupying storage."""
+        with self._lock:
+            return int(sum(self._seg_dead)) + self._chunk_dead
+
+    def garbage_units(self) -> List[Tuple[Optional[int], int, int]]:
+        """Compaction candidates: ``(segment_index | None, rows, dead)``
+        — one entry per flushed segment plus one (``None``) for the
+        buffered chunks."""
+        with self._lock:
+            out: List[Tuple[Optional[int], int, int]] = [
+                (s, n, d) for s, (n, d)
+                in enumerate(zip(self._seg_rows, self._seg_dead))]
+            out.append((None, self._rows_buffered, self._chunk_dead))
+            return out
+
+    def compact_segment(self, si: int) -> int:
+        """Rewrite flushed segment ``si`` without its superseded/deleted
+        row versions and rebuild its zone maps; returns rows dropped.
+        Runs entirely under the partition lock (decide + rewrite + swap in
+        one atomic window — a budgeted background caller amortizes the
+        stall; see core/compaction.py).  Renumbers the position space when
+        rows drop, so the layout epoch bumps and in-flight conditional
+        repairs against the old numbering are rejected, not misapplied.
+        The replaced file is deleted once no snapshot pins remain.  A
+        segment with no dead rows only refreshes missing zone maps."""
+        with self._lock:
+            if not (0 <= si < len(self._seg_files)):
+                raise IndexError(f"segment {si} out of range")
+            path = self._seg_path(self._seg_files[si])
+            with np.load(path) as f:
+                seg = {k: f[k] for k in f.files}
+            n = int(seg["id"].shape[0])
+            lo = int(sum(self._seg_rows[:si]))
+            live = self._index.lookup(seg["id"]) == np.arange(lo, lo + n)
+            m = int(live.sum())
+            if m == n:
+                self._seg_dead[si] = 0
+                if not self._seg_zmaps[si]:
+                    self._seg_zmaps[si] = compute_zone_map(
+                        seg, self.zone_map_cols)
+                    self._write_manifest_locked()
+                return 0
+            kept = {k: v[live] for k, v in seg.items()}
+            fname = f"seg{self._seg_seq:06d}.npz"
+            self._seg_seq += 1
+            new_path = self._seg_path(fname)
+            tmp = new_path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, **kept)
+            os.replace(tmp, new_path)
+            # renumber: kept rows compact to [lo, lo+m); the suffix of the
+            # position space shifts down.  Every index entry in the span
+            # points at a live row by construction.
+            new_abs = np.full(n, -1, np.int64)
+            new_abs[live] = lo + np.arange(m)
+            self._index.remap_span(lo, lo + n, new_abs)
+            self._index.shift_from(lo + n, -(n - m))
+            self._seg_files[si] = fname
+            self._seg_rows[si] = m
+            self._seg_zmaps[si] = compute_zone_map(kept, self.zone_map_cols)
+            self._seg_dead[si] = 0
+            self._rows_total -= n - m
+            self._epoch += 1
+            # manifest BEFORE dropping the old file: a crash in between
+            # must never leave the manifest pointing at a deleted segment
+            self._write_manifest_locked()
+            self._garbage.append(path)
+            if self._pins == 0:
+                self._gc_locked()
+            return n - m
+
+    def compact_chunks(self) -> int:
+        """Drop superseded/deleted row versions from the buffered
+        (unflushed) chunks — the whole story for spill-less in-memory
+        partitions; returns rows dropped.  Merges the survivors into one
+        chunk carrying the min-merged lineage (conservative, like flush)."""
+        with self._lock:
+            if self._chunk_dead == 0 or not self._chunks:
+                return 0
+            merged = {k: np.concatenate([c[k] for c in self._chunks])
+                      for k in self._chunks[0]}
+            n = int(merged["id"].shape[0])
+            lo = self._flushed_rows_locked()
+            live = self._index.lookup(merged["id"]) == \
+                np.arange(lo, lo + n)
+            m = int(live.sum())
+            if m == n:
+                self._chunk_dead = 0
+                return 0
+            kept = {k: v[live] for k, v in merged.items()}
+            lin = merge_lineage(self._chunk_lineage)
+            new_abs = np.full(n, -1, np.int64)
+            new_abs[live] = lo + np.arange(m)
+            self._index.remap_span(lo, lo + n, new_abs)
+            self._chunks = [kept] if m else []
+            self._chunk_lineage = [lin or None] if m else []
+            self._rows_buffered = m
+            self._rows_total -= n - m
+            self._chunk_dead = 0
+            self._epoch += 1
+            return n - m
+
+    def compact(self, min_dead_frac: float = 0.0) -> int:
+        """Compact every unit whose dead fraction reaches
+        ``min_dead_frac`` (0.0 = reclaim everything); returns rows
+        dropped.  Synchronous; the background job budgets the same
+        primitives instead."""
+        dropped = 0
+        for si, rows, dead in self.garbage_units():
+            if rows == 0 or dead == 0 or dead / rows < min_dead_frac:
+                continue
+            dropped += (self.compact_chunks() if si is None
+                        else self.compact_segment(si))
+        return dropped
 
     # -------------------------------------------------------------- lineage
     def lineage_units(self) -> List[Tuple[int, int, Lineage]]:
@@ -269,14 +674,19 @@ class StoragePartition:
             return units
 
     def update_lineage(self, start_row: int, rows: int,
-                       lineage: Lineage) -> bool:
+                       lineage: Lineage,
+                       expect_epoch: Optional[int] = None) -> bool:
         """Advance one unit's lineage (per-table max) after the repair
         scheduler proved its rows current — e.g. a dirty-key probe matched
         nothing.  No-op (returns False) when the unit boundary no longer
-        exists (it was flushed and merged into a segment mid-scan): the
-        merged segment keeps its conservative min-lineage and is simply
-        re-scanned, which the conditional repair path makes idempotent."""
+        exists (it was flushed and merged into a segment mid-scan) or the
+        layout epoch moved (compaction renumbered: the 'same' boundary may
+        now cover different rows): the unit keeps its old lineage, stays
+        stale, and is simply re-scanned — the conditional repair path
+        makes that idempotent."""
         with self._lock:
+            if expect_epoch is not None and expect_epoch != self._epoch:
+                return False
             cum = 0
             for i, r in enumerate(self._seg_rows):
                 if cum == start_row and r == rows:
@@ -299,50 +709,63 @@ class StoragePartition:
 
     def read_rows(self, start: int, n: int) -> Dict[str, np.ndarray]:
         """Columns for global rows [start, start+n) — from disk segments
-        and/or buffered chunks.  Positions are append-stable, so a unit
-        snapshot stays readable across a concurrent flush."""
+        and/or buffered chunks.  The span list AND the segment file names
+        are captured under the lock, and the partition stays pinned for
+        the duration, so the read is consistent even while a concurrent
+        compaction replaces files (their content outlives the pin)."""
         with self._lock:
-            seg_rows = list(self._seg_rows)
+            self._pins += 1
+            spans = [(self._seg_path(f), r) for f, r
+                     in zip(self._seg_files, self._seg_rows)]
             chunks = list(self._chunks)
-        parts: List[Dict[str, np.ndarray]] = []
-        end = start + n
-        cum = 0
-        for s, r in enumerate(seg_rows):
-            lo, hi = cum, cum + r
-            cum += r
-            if hi <= start or lo >= end:
-                continue
-            seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
-                                       f"seg{s:06d}.npz"))
-            a, b = max(start - lo, 0), min(end, hi) - lo
-            parts.append({k: seg[k][a:b] for k in seg.files})
-        for c in chunks:
-            r = int(c["id"].shape[0])
-            lo, hi = cum, cum + r
-            cum += r
-            if hi <= start or lo >= end:
-                continue
-            a, b = max(start - lo, 0), min(end, hi) - lo
-            parts.append({k: v[a:b] for k, v in c.items()})
-        if not parts:
-            raise IndexError(f"rows [{start}, {end}) out of range")
-        if len(parts) == 1:
-            return parts[0]
-        return {k: np.concatenate([p[k] for p in parts])
-                for k in parts[0]}
+        try:
+            parts: List[Dict[str, np.ndarray]] = []
+            end = start + n
+            cum = 0
+            for path, r in spans:
+                lo, hi = cum, cum + r
+                cum += r
+                if hi <= start or lo >= end:
+                    continue
+                with np.load(path) as seg:
+                    a, b = max(start - lo, 0), min(end, hi) - lo
+                    parts.append({k: seg[k][a:b] for k in seg.files})
+            for c in chunks:
+                r = int(c["id"].shape[0])
+                lo, hi = cum, cum + r
+                cum += r
+                if hi <= start or lo >= end:
+                    continue
+                a, b = max(start - lo, 0), min(end, hi) - lo
+                parts.append({k: v[a:b] for k, v in c.items()})
+            if not parts:
+                raise IndexError(f"rows [{start}, {end}) out of range")
+            if len(parts) == 1:
+                return parts[0]
+            return {k: np.concatenate([p[k] for p in parts])
+                    for k in parts[0]}
+        finally:
+            self._unpin()
 
     def repair_rows(self, batch: Dict[str, np.ndarray],
                     global_rows: np.ndarray,
-                    lineage: Optional[Lineage]) -> int:
+                    lineage: Optional[Lineage],
+                    expect_epoch: Optional[int] = None) -> int:
         """In-place upsert of re-enriched rows, exactly-once under
         concurrent ingestion: a row is applied only if the pk index still
         points at the global row it was scanned from — a concurrent ingest
         upsert (which remapped the pk) always wins, and a repeated scan of
-        the same unit is a no-op.  Returns #rows actually repaired."""
+        the same unit is a no-op.  ``expect_epoch`` extends the guarantee
+        across compaction: after a renumbering, freed position numbers can
+        be reused, so the positional check alone could spuriously match —
+        an epoch mismatch rejects the whole batch (the unit stays stale
+        and is re-scanned).  Returns #rows actually repaired."""
         ids = np.asarray(batch["id"], np.int64)
         if ids.size == 0:
             return 0
         with self._lock:
+            if expect_epoch is not None and expect_epoch != self._epoch:
+                return 0
             live = self._index.lookup(ids) == np.asarray(global_rows,
                                                          np.int64)
             if not live.any():
@@ -350,9 +773,33 @@ class StoragePartition:
             rows = {k: v[live] for k, v in batch.items()}
             n = int(live.sum())
             base = self._rows_total
+            self._note_dead_locked(
+                np.asarray(global_rows, np.int64)[live])
             self._index.put(ids[live], np.arange(base, base + n))
             self._append_locked(rows, n, lineage)
             return n
+
+    def delete_rows(self, ids: np.ndarray, global_rows: np.ndarray,
+                    expect_epoch: Optional[int] = None) -> int:
+        """Conditionally delete rows (repair filter-deletes): a pk is
+        removed from the index only if it still points at the global row
+        it was scanned from, so a concurrent ingest upsert always wins and
+        re-scans are no-ops — the same exactly-once contract as
+        ``repair_rows``, epoch check included.  The row versions become
+        dead storage, reclaimed by compaction.  Returns #rows deleted."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return 0
+        with self._lock:
+            if expect_epoch is not None and expect_epoch != self._epoch:
+                return 0
+            live = self._index.lookup(ids) == np.asarray(global_rows,
+                                                         np.int64)
+            if not live.any():
+                return 0
+            self._note_dead_locked(
+                np.asarray(global_rows, np.int64)[live])
+            return self._index.remove(ids[live])
 
     @property
     def count(self) -> int:
@@ -361,23 +808,28 @@ class StoragePartition:
 
     @property
     def rows_total(self) -> int:
-        """All appended rows, including logically superseded versions."""
+        """All stored row versions, including logically superseded ones
+        (shrinks when compaction reclaims them)."""
         with self._lock:
             return self._rows_total
 
     def scan(self):
-        """Yield buffered column chunks (analytical-query surface; flushed
-        segments are read back from disk).  Superseded row versions still
-        appear — in global row order, so 'latest occurrence wins' resolves
-        them exactly like the pk index does."""
+        """Yield column chunks (flushed segments read back from disk, then
+        buffered chunks).  Superseded row versions still appear; without a
+        ``sort_key`` they resolve by 'latest occurrence wins' in scan
+        order, but the exact contract — deletes included — is the pk
+        index, i.e. ``snapshot_view()``/the query subsystem."""
         with self._lock:
+            self._pins += 1
+            paths = [self._seg_path(f) for f in self._seg_files]
             chunks = list(self._chunks)
-            nseg = self._segments
-        for s in range(nseg):
-            seg = np.load(os.path.join(self.spill_dir, f"p{self.pid}",
-                                       f"seg{s:06d}.npz"))
-            yield {k: seg[k] for k in seg.files}
-        yield from chunks
+        try:
+            for path in paths:
+                with np.load(path) as seg:
+                    yield {k: seg[k] for k in seg.files}
+            yield from chunks
+        finally:
+            self._unpin()
 
     def get(self, pk: int) -> Optional[Dict[str, Any]]:
         with self._lock:
@@ -396,12 +848,10 @@ class StoragePartition:
             if not self.spill_dir:
                 return None
             r = row
-            for s in range(self._segments):
-                seg = np.load(os.path.join(
-                    self.spill_dir, f"p{self.pid}", f"seg{s:06d}.npz"))
-                n = seg["id"].shape[0]
+            for fname, n in zip(self._seg_files, self._seg_rows):
                 if r < n:
-                    return {k: seg[k][r] for k in seg.files}
+                    with np.load(self._seg_path(fname)) as seg:
+                        return {k: seg[k][r] for k in seg.files}
                 r -= n
             return None
 
@@ -411,8 +861,11 @@ class StorageJob:
     Partition Holder feeds this through an active holder — see feed.py)."""
 
     def __init__(self, num_partitions: int, spill_dir: Optional[str] = None,
-                 upsert: bool = False, segment_rows: int = 100_000):
-        self.partitions = [StoragePartition(i, spill_dir, segment_rows)
+                 upsert: bool = False, segment_rows: int = 100_000,
+                 zone_map_cols: Optional[Tuple[str, ...]] = None,
+                 sort_key: Optional[str] = None):
+        self.partitions = [StoragePartition(i, spill_dir, segment_rows,
+                                            zone_map_cols, sort_key)
                            for i in range(num_partitions)]
         self.upsert = upsert
         self.stored = 0
@@ -448,6 +901,14 @@ class StorageJob:
     def count(self) -> int:
         return sum(p.count for p in self.partitions)
 
+    @property
+    def dead_rows(self) -> int:
+        return sum(p.dead_rows for p in self.partitions)
+
+    @property
+    def rows_total(self) -> int:
+        return sum(p.rows_total for p in self.partitions)
+
     def scan(self):
         for p in self.partitions:
             yield from p.scan()
@@ -458,6 +919,23 @@ class StorageJob:
     def flush(self) -> None:
         for p in self.partitions:
             p.flush()
+
+    def compact(self, min_dead_frac: float = 0.0) -> int:
+        """Synchronously reclaim superseded/deleted row versions across
+        every partition; returns rows dropped (the background job in
+        core/compaction.py budgets the same primitives instead)."""
+        return sum(p.compact(min_dead_frac) for p in self.partitions)
+
+    def query(self) -> "Query":  # noqa: F821 (forward ref, lazy import)
+        """Entry point of the analytical query subsystem: a composable
+        ``Query`` builder over a snapshot-consistent view of this store
+        (see core/query.py)."""
+        from repro.core.query import Query
+        return Query(self)
+
+    def snapshot(self) -> "StoreSnapshot":  # noqa: F821
+        from repro.core.query import StoreSnapshot
+        return StoreSnapshot(self)
 
     def recover(self) -> "StorageJob":
         for p in self.partitions:

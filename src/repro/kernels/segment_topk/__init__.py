@@ -1,0 +1,1 @@
+from repro.kernels.segment_topk.ops import segment_topk_idx  # noqa: F401

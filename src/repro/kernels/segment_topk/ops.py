@@ -1,0 +1,22 @@
+"""Jit'd public wrapper: Pallas on TPU, interpret-mode Pallas (or the jnp
+oracle) on CPU."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import auto_interpret, resolve_use_pallas
+from repro.kernels.segment_topk import ref
+from repro.kernels.segment_topk.kernel import segment_topk_pallas
+
+
+def segment_topk_idx(values: jax.Array, seg: jax.Array, num_segments: int,
+                     k: int, use_pallas: bool | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Per-segment top-k selection INDICES ((S, k) int32 rows, -1-filled;
+    value desc, ties by row asc — stable-sort order on both paths).
+    ``use_pallas=None`` defers to the global dispatch policy."""
+    if not resolve_use_pallas(use_pallas):
+        return ref.segment_topk_idx(values, seg, num_segments, k)
+    return segment_topk_pallas(values, seg, num_segments, k,
+                               interpret=auto_interpret(interpret))

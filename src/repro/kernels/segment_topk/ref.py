@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the per-segment top-k kernel: one composite-key
+stable argsort (ascending segment, descending clipped value, ties by row)
+— the same formulation as core/enrich/ops.py's ``_segment_topk_ref``,
+kept standalone here so the kernel package stays self-contained."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_topk_idx(values: jax.Array, seg: jax.Array,
+                     num_segments: int, k: int) -> jax.Array:
+    """values: (R,) int (negatives rank as 0, like the kernel's clip);
+    seg: (R,) int32, rows outside [0, num_segments) dropped.
+    Returns (num_segments, k) int32 row indices, -1-filled."""
+    r = values.shape[0]
+    vmax = jnp.int64(1) << 31
+    v = jnp.clip(values.astype(jnp.int64), 0, vmax - 1)
+    segi = jnp.where((seg >= 0) & (seg < num_segments),
+                     seg.astype(jnp.int64), num_segments)
+    composite = segi * vmax + (vmax - 1 - v)   # asc seg, desc value
+    order = jnp.argsort(composite)             # stable: ties by row asc
+    sseg = segi[order]
+    starts = jnp.searchsorted(sseg, jnp.arange(num_segments + 1,
+                                               dtype=jnp.int64))
+    pos = jnp.arange(r) - starts[jnp.clip(sseg, 0, num_segments)]
+    keep = (pos < k) & (sseg < num_segments)
+    slot = jnp.where(keep, sseg * k + pos, num_segments * k)
+    out = jnp.full((num_segments * k + 1,), -1, jnp.int32)
+    out = out.at[slot].set(
+        jnp.where(keep, order, -1).astype(jnp.int32), mode="drop")
+    return out[:-1].reshape(num_segments, k)

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FeedConfig, FeedManager, PartitionHolder, RefStore
+from repro.core import (FeedConfig, FeedManager, PartitionHolder, RefStore,
+                        pipeline)
 from repro.core.computing import ComputingRunner, ComputingSpec
 from repro.core.enrich import dispatch, ops
 from repro.core.enrich import queries as Q
@@ -130,10 +131,70 @@ def test_segment_topk_dispatch_matches_ops_ref():
     seg = jnp.asarray(rng.integers(0, 12, 300).astype(np.int32))
     pay = jnp.asarray(np.arange(300, dtype=np.int32))
     want = ops._segment_topk_ref(vals, seg, pay, 12, 3)
+    dispatch.reset_bucket_stats()
     with dispatch_mode("pallas"):
         got = dispatch.segment_topk(vals, seg, pay, 12, 3)
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
     np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    # the kernel path actually engaged (satellite: segment_topk is no
+    # longer reference-only)
+    assert any(op == "segment_topk" for op, _ in dispatch.bucket_stats())
+
+
+# dense ties (values mod 7), segments with < k rows, empty segments, an
+# empty batch, and bucket-boundary row counts — the composite-sort
+# oracle's tie-break (value desc, row asc) must survive the kernel
+@pytest.mark.parametrize("r,s,k", [(0, 5, 2), (64, 200, 4), (300, 12, 3),
+                                   (512, 1, 1), (700, 129, 8),
+                                   (1000, 40, 5)])
+def test_segment_topk_kernel_matches_ref_randomized(r, s, k):
+    rng = np.random.default_rng(r + s + k)
+    vals = jnp.asarray((rng.integers(0, 700, r) % 7).astype(np.int32))
+    seg = jnp.asarray(rng.integers(0, s, max(r, 1)
+                                   ).astype(np.int32)[:r])
+    pay = jnp.asarray(rng.integers(0, 10_000, r).astype(np.int64))
+    valid = jnp.asarray(rng.random(r) < 0.8)
+    want = ops._segment_topk_ref(vals, seg, pay, s, k, valid)
+    with dispatch_mode("pallas"):
+        got = dispatch.segment_topk(vals, seg, pay, s, k, valid)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_segment_topk_uint32_above_int31_falls_back_exactly():
+    """The kernel ranks in int32; uint32 values >= 2^31 would wrap
+    negative there — they must take the reference path and rank by true
+    magnitude."""
+    vals = jnp.asarray(np.array([3_000_000_000, 5, 7], np.uint32))
+    seg = jnp.asarray(np.zeros(3, np.int32))
+    pay = jnp.asarray(np.array([10, 20, 30], np.int32))
+    dispatch.reset_bucket_stats()
+    with dispatch_mode("pallas"):
+        got_pay, got_val = dispatch.segment_topk(vals, seg, pay, 1, 2)
+    assert got_pay[0].tolist() == [10, 30]         # 3e9 really ranks first
+    assert not any(op == "segment_topk" for op, _ in
+                   dispatch.bucket_stats())
+
+
+def test_segment_topk_outside_kernel_envelope_falls_back():
+    """Q3's 50K-segment top-3 must keep the reference sort (the kernel's
+    winner tables are VMEM-bounded), as must 64-bit values."""
+    rng = np.random.default_rng(8)
+    vals = jnp.asarray(rng.integers(0, 100, 400).astype(np.int32))
+    seg = jnp.asarray(rng.integers(0, 5000, 400).astype(np.int32))
+    pay = jnp.asarray(np.arange(400, dtype=np.int32))
+    dispatch.reset_bucket_stats()
+    with dispatch_mode("pallas"):
+        got = dispatch.segment_topk(vals, seg, pay, 5000, 3)
+        got64 = dispatch.segment_topk(vals.astype(jnp.int64), seg, pay,
+                                      12, 3)
+    want = ops._segment_topk_ref(vals, seg, pay, 5000, 3)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    want64 = ops._segment_topk_ref(vals.astype(jnp.int64), seg, pay, 12, 3)
+    np.testing.assert_array_equal(np.asarray(got64[0]),
+                                  np.asarray(want64[0]))
+    assert not any(op == "segment_topk" for op, _ in
+                   dispatch.bucket_stats())
 
 
 def test_flash_attention_policy_routes_to_pallas():
@@ -240,9 +301,12 @@ def test_feed_end_to_end_with_coalescing_stores_every_record():
     store = RefStore()
     Q.make_reference_tables(store, scale=0.002, seed=7)
     mgr = FeedManager(store)
-    cfg = FeedConfig(name="coal", udf=Q.Q1, batch_size=50,
-                     num_partitions=2, coalesce_rows=400)
-    h = mgr.start(cfg, SyntheticAdapter(total=1000, frame_size=50, seed=11))
+    p = (pipeline(SyntheticAdapter(total=1000, frame_size=50, seed=11),
+                  "coal")
+         .parse(batch_size=50)
+         .options(num_partitions=2, coalesce_rows=400)
+         .enrich(Q.Q1).store())
+    h = mgr.submit(p)
     stats = h.join(timeout=300)
     assert stats.stored == 1000
     # invocations can only shrink under coalescing, never grow

@@ -14,7 +14,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (FeedConfig, FeedManager, PartitionHolder,
-                        RefStore, StopRecord, StorageJob, SyntheticAdapter)
+                        RefStore, StopRecord, StorageJob, SyntheticAdapter,
+                        pipeline)
 from repro.core.enrich import queries as Q
 from repro.core.records import SyntheticTweets, parse_json_lines
 
@@ -23,6 +24,15 @@ def make_manager(scale=0.002):
     store = RefStore()
     Q.make_reference_tables(store, scale=scale, seed=7)
     return FeedManager(store)
+
+
+def submit(mgr, name, adapter, udf=Q.Q1, batch=50, partitions=2, **opts):
+    """Plan-API equivalent of the old one-UDF FeedConfig shim feeds."""
+    p = (pipeline(adapter, name).parse(batch_size=batch)
+         .options(num_partitions=partitions, **opts))
+    if udf is not None:
+        p.enrich(udf)
+    return mgr.submit(p.store())
 
 
 # ---------------------------------------------------------------------------
@@ -66,9 +76,9 @@ def test_feed_end_to_end_enriched_and_complete():
     mgr = make_manager()
     # coalesce_rows=0: this test does exact invocation/compile accounting,
     # which the (default-on) backlog coalescer would legitimately change
-    cfg = FeedConfig(name="e2e", udf=Q.Q1, batch_size=100,
-                     num_partitions=2, coalesce_rows=0)
-    h = mgr.start(cfg, SyntheticAdapter(total=1000, frame_size=100, seed=3))
+    h = submit(mgr, "e2e", SyntheticAdapter(total=1000, frame_size=100,
+                                            seed=3),
+               batch=100, coalesce_rows=0)
     stats = h.join(timeout=120)
     assert stats.records_in == 1000
     assert stats.stored == 1000
@@ -92,9 +102,8 @@ def test_feed_end_to_end_enriched_and_complete():
 
 def test_feed_partial_last_batch_padded():
     mgr = make_manager()
-    cfg = FeedConfig(name="partial", udf=Q.Q1, batch_size=64,
-                     num_partitions=1, coalesce_rows=0)
-    h = mgr.start(cfg, SyntheticAdapter(total=150, frame_size=64))
+    h = submit(mgr, "partial", SyntheticAdapter(total=150, frame_size=64),
+               batch=64, partitions=1, coalesce_rows=0)
     stats = h.join(timeout=60)
     assert stats.stored == 150                # 64+64+22 (padded, not lost)
     assert stats.predeploy["compiles"] <= 2   # one shape -> one executable
@@ -102,8 +111,8 @@ def test_feed_partial_last_batch_padded():
 
 def test_feed_without_udf_pure_ingestion():
     mgr = make_manager()
-    cfg = FeedConfig(name="pure", udf=None, batch_size=50, num_partitions=2)
-    h = mgr.start(cfg, SyntheticAdapter(total=500, frame_size=50))
+    h = submit(mgr, "pure", SyntheticAdapter(total=500, frame_size=50),
+               udf=None)
     stats = h.join(timeout=60)
     assert stats.stored == 500
     assert stats.predeploy["compiles"] == 0
@@ -147,9 +156,8 @@ def test_fault_injection_retry_exactly_once():
         return False
 
     # coalesce_rows=0: the hook targets a specific invocation ordinal
-    cfg = FeedConfig(name="fault", udf=Q.Q1, batch_size=50,
-                     num_partitions=2, fault_hook=hook, coalesce_rows=0)
-    h = mgr.start(cfg, SyntheticAdapter(total=500, frame_size=50))
+    h = submit(mgr, "fault", SyntheticAdapter(total=500, frame_size=50),
+               fault_hook=hook, coalesce_rows=0)
     stats = h.join(timeout=60)
     assert stats.retries == 1
     assert stats.stored == 500                 # nothing lost, nothing doubled
@@ -158,10 +166,9 @@ def test_fault_injection_retry_exactly_once():
 
 def test_fault_exhausted_retries_surfaces():
     mgr = make_manager()
-    cfg = FeedConfig(name="fatal", udf=Q.Q1, batch_size=50,
-                     num_partitions=1, max_retries=1, retry_backoff_s=0.01,
-                     fault_hook=lambda inv: True)
-    h = mgr.start(cfg, SyntheticAdapter(total=100, frame_size=50))
+    h = submit(mgr, "fatal", SyntheticAdapter(total=100, frame_size=50),
+               partitions=1, max_retries=1, retry_backoff_s=0.01,
+               fault_hook=lambda inv: True)
     with pytest.raises(RuntimeError, match="injected fault"):
         h.join(timeout=60)
 
@@ -170,19 +177,16 @@ def test_work_stealing_engages_for_imbalanced_partitions():
     mgr = make_manager()
     # many partitions, tiny frames: some holders will back up; idle workers
     # must steal rather than spin
-    cfg = FeedConfig(name="steal", udf=Q.Q1, batch_size=20,
-                     num_partitions=4, holder_capacity=32)
-    h = mgr.start(cfg, SyntheticAdapter(total=2000, frame_size=20))
+    h = submit(mgr, "steal", SyntheticAdapter(total=2000, frame_size=20),
+               batch=20, partitions=4, holder_capacity=32)
     stats = h.join(timeout=120)
     assert stats.stored == 2000
 
 
 def test_elastic_scale_up_mid_feed():
     mgr = make_manager()
-    cfg = FeedConfig(name="elastic", udf=Q.Q1, batch_size=25,
-                     num_partitions=1)
     adapter = SyntheticAdapter(total=1500, frame_size=25, rate=5000.0)
-    h = mgr.start(cfg, adapter)
+    h = submit(mgr, "elastic", adapter, batch=25, partitions=1)
     time.sleep(0.1)
     h.scale_up(2)                              # 1 -> 3 computing partitions
     stats = h.join(timeout=120)
@@ -194,10 +198,8 @@ def test_elastic_scale_up_mid_feed():
 
 def test_graceful_stop_drains_in_flight():
     mgr = make_manager()
-    cfg = FeedConfig(name="stop", udf=Q.Q1, batch_size=50,
-                     num_partitions=2)
     adapter = SyntheticAdapter(total=1_000_000, frame_size=50, rate=20000.0)
-    h = mgr.start(cfg, adapter)
+    h = submit(mgr, "stop", adapter)
     time.sleep(0.3)
     h.stop()
     stats = h.join(timeout=60)
@@ -234,9 +236,7 @@ def test_socket_adapter_feed():
     mgr = make_manager()
     adapter = SocketAdapter("127.0.0.1", 0, frame_size=20)
     host, port = adapter.address
-    cfg = FeedConfig(name="sock", udf=Q.UDF1, batch_size=20,
-                     num_partitions=1)
-    h = mgr.start(cfg, adapter)
+    h = submit(mgr, "sock", adapter, udf=Q.UDF1, batch=20, partitions=1)
 
     def client():
         lines = SyntheticTweets(seed=9).raw_lines(100)

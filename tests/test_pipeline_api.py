@@ -1,5 +1,6 @@
 """Plan-API tests: declarative pipeline compilation (fusion, validation),
-multi-sink fan-out, the FeedConfig shim, and feed-lifecycle fixes.
+multi-sink fan-out, the baseline-only FeedConfig entry point, and
+feed-lifecycle fixes.
 
 Deliberately hypothesis-free: CI runs this module in a minimal container
 (`pip install -e . pytest` only) so API regressions surface even where the
@@ -65,10 +66,12 @@ def test_fused_chain_bitwise_matches_sequential_reference_dispatch():
 
 
 def _run_single_udf_feed(mgr, name, udf, total, frame, seed):
-    cfg = FeedConfig(name=name, udf=udf, batch_size=frame,
-                     num_partitions=1, coalesce_rows=0)
-    h = mgr.start(cfg, SyntheticAdapter(total=total, frame_size=frame,
-                                        seed=seed))
+    p = (pipeline(SyntheticAdapter(total=total, frame_size=frame,
+                                   seed=seed), name)
+         .parse(batch_size=frame)
+         .options(num_partitions=1, coalesce_rows=0)
+         .enrich(udf).store())
+    h = mgr.submit(p)
     stats = h.join(timeout=120)
     return h, stats
 
@@ -354,30 +357,30 @@ def test_unknown_option_raises():
 
 
 # ---------------------------------------------------------------------------
-# FeedConfig shim + feed lifecycle
+# FeedConfig is baseline/runtime-only now + feed lifecycle
 # ---------------------------------------------------------------------------
 
-def test_feedconfig_shim_lowers_to_one_stage_plan():
+def test_start_rejects_framework_new():
+    """The deprecated framework='new' shim lowering is gone: start() is
+    the baseline rigs' entry point only, and points plan-shaped callers
+    at pipeline()/submit."""
     mgr = make_manager()
     cfg = FeedConfig(name="shim", udf=Q.Q1, batch_size=100,
                      num_partitions=2)
-    h = mgr.start(cfg, SyntheticAdapter(total=300, frame_size=100, seed=1))
-    assert h.plan is not None
-    assert h.plan.stage_names == ("q1_safety_level",)
-    assert [s.name for s in h.plan.sinks] == ["store"]
-    stats = h.join(timeout=120)
-    assert stats.stored == 300
+    with pytest.raises(ValueError, match="pipeline"):
+        mgr.start(cfg, SyntheticAdapter(total=300, frame_size=100, seed=1))
+    assert "shim" not in mgr.feeds        # nothing half-registered
 
 
 def test_feed_name_reusable_after_join():
     """Completed feeds deregister: same name + holder IDs start cleanly."""
     mgr = make_manager()
     for round_ in range(2):
-        cfg = FeedConfig(name="again", udf=Q.Q1, batch_size=50,
-                         num_partitions=2)
-        h = mgr.start(cfg, SyntheticAdapter(total=200, frame_size=50,
-                                            seed=round_))
-        stats = h.join(timeout=120)
+        p = (pipeline(SyntheticAdapter(total=200, frame_size=50,
+                                       seed=round_), "again")
+             .parse(batch_size=50).options(num_partitions=2)
+             .enrich(Q.Q1).store())
+        stats = mgr.submit(p).join(timeout=120)
         assert stats.stored == 200
     assert "again" not in mgr.feeds
     assert mgr.holder_manager.partitions("again:intake") == []
@@ -386,10 +389,10 @@ def test_feed_name_reusable_after_join():
 def test_feed_name_reusable_after_stop():
     mgr = make_manager()
     for round_ in range(2):
-        cfg = FeedConfig(name="stopper", udf=None, batch_size=50)
         adapter = SyntheticAdapter(total=100_000, frame_size=50,
                                    rate=20_000.0)
-        h = mgr.start(cfg, adapter)
+        h = mgr.submit(pipeline(adapter, "stopper").parse(batch_size=50)
+                       .store())
         h.stop()
         stats = h.join(timeout=60)
         assert stats.stored == stats.records_in
@@ -424,9 +427,10 @@ def test_insert_baseline_counts_rows_not_columns_for_dict_frames():
 
 def test_intake_counts_rows_for_dict_frames():
     mgr = make_manager()
-    cfg = FeedConfig(name="new-dict", udf=Q.Q1, batch_size=50,
-                     num_partitions=1)
-    h = mgr.start(cfg, DictFrameAdapter(total=150, frame_size=50))
+    h = mgr.submit(pipeline(DictFrameAdapter(total=150, frame_size=50),
+                            "new-dict")
+                   .parse(batch_size=50).options(num_partitions=1)
+                   .enrich(Q.Q1).store())
     stats = h.join(timeout=120)
     assert stats.records_in == 150
     assert stats.stored == 150

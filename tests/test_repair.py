@@ -473,22 +473,155 @@ def test_feed_without_refresh_has_no_repair_job():
 
 
 # ---------------------------------------------------------------------------
-# shim deprecation (satellite)
+# filter-deletes (satellite: closes the PR 4 known limit — a stored row
+# the re-evaluated filter rejects is deleted, not just counted)
 # ---------------------------------------------------------------------------
 
-def test_feedconfig_start_shim_warns_plan_submit_does_not():
+def filter_plan(mgr, threshold=1, name="fdel", refresh=None):
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50, seed=3), name)
+         .parse(batch_size=50)
+         .options(num_partitions=2)
+         .enrich(Q.Q1)
+         .filter(lambda b: b["safety_level"] >= threshold, name="lvl")
+         .store(refresh=refresh))
+    return p.compile(mgr.refstore)
+
+
+def test_repair_deletes_rows_the_reevaluated_filter_rejects():
+    mgr = make_manager()
+    plan = filter_plan(mgr, refresh=RepairSpec(budget_rows_s=1e9))
+    storage = seed_storage(mgr, plan, 600)
+    stored0 = storage.count
+    assert stored0 > 0
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    try:
+        # flip a slab of countries below the filter threshold: every
+        # stored row joining them must DISAPPEAR from the store
+        table = mgr.refstore["safety_levels"]
+        flipped = np.arange(40, dtype=np.int64)
+        table.upsert(flipped, safety_level=np.zeros(40, np.int32))
+        doomed = [pk for pk, row in stored_rows(storage).items()
+                  if int(row["country"]) < 40]
+        assert doomed, "seed produced no rows in the flipped countries"
+        assert job.drain(timeout=60)
+        assert job.stats.deleted_rows == len(doomed)
+        assert job.stats.invalidated_rows == len(doomed)
+        assert storage.count == stored0 - len(doomed)
+        for pk in doomed:
+            assert storage.get(pk) is None
+        # the deleted versions are dead storage until compaction
+        assert storage.dead_rows >= len(doomed)
+        assert storage.compact() >= len(doomed)
+        # survivors are current AND still satisfy the filter
+        assert_store_current(mgr, storage)
+        for row in stored_rows(storage).values():
+            assert int(row["safety_level"]) >= 1
+        # idempotent: a re-scan neither resurrects nor double-deletes
+        before = job.stats.deleted_rows
+        job.step(force=True)
+        assert job.stats.deleted_rows == before
+        assert storage.count == stored0 - len(doomed)
+    finally:
+        job.stop()
+
+
+def test_repair_delete_loses_to_racing_ingest_upsert():
+    """Exactly-once composition: if an ingest upsert re-wrote the pk after
+    the repair scan, the conditional delete must spare the newer row."""
+    mgr = make_manager()
+    plan = filter_plan(mgr, refresh=RepairSpec(budget_rows_s=1e9))
+    storage = seed_storage(mgr, plan, 200, upsert=True)
+    rows = stored_rows(storage)
+    victim_pk, victim = next(
+        (pk, r) for pk, r in rows.items() if int(r["country"]) < 40)
+    part = storage.partitions[victim_pk % len(storage.partitions)]
+    table = mgr.refstore["safety_levels"]
+    table.upsert(np.arange(40, dtype=np.int64),
+                 safety_level=np.zeros(40, np.int32))
+    # simulate the racing ingest upsert landing between scan and delete:
+    # re-write the victim AFTER repair captured its unit list by patching
+    # delete_rows to upsert first, once
+    orig_delete = part.delete_rows
+    state = {"fired": False}
+
+    def racing_delete(ids, global_rows, expect_epoch=None):
+        if not state["fired"] and np.isin(victim_pk, ids):
+            state["fired"] = True
+            fresh = {k: np.asarray([victim[k]]) for k in victim}
+            fresh["valid"] = np.ones(1, bool)
+            part.insert(fresh, upsert=True, lineage={"safety_levels": 0})
+        return orig_delete(ids, global_rows, expect_epoch)
+
+    part.delete_rows = racing_delete
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    try:
+        assert job.drain(timeout=60)
+    finally:
+        job.stop()
+        part.delete_rows = orig_delete
+    assert state["fired"]
+    # the racing upsert won round 1; its stale-lineage row was then
+    # re-scanned and deleted on a LATER pass (it still fails the filter) —
+    # but never misattributed: the store converges with no victim row
+    assert storage.get(victim_pk) is None
+    # compact first: the scan-order helper would resurrect deleted
+    # versions (the pk index — and so compaction — owns delete semantics)
+    storage.compact()
+    assert_store_current(mgr, storage)
+
+
+def test_repair_unit_survives_compaction_shrinking_its_span():
+    """Regression: a compaction between the staleness scan and the unit
+    read shrinks the position space — the stale (start, rows) span may
+    now be short or out of range entirely.  The unit must be skipped (and
+    re-listed next pass), never crash or misapply."""
+    mgr = make_manager()
+    plan = q1_plan(mgr, refresh=RepairSpec(budget_rows_s=1e9))
+    storage = seed_storage(mgr, plan, 400, upsert=True)
+    # churn so compaction has something to drop
+    runner = ComputingRunner(ComputingSpec(plan.udf, plan.batch_size),
+                             mgr.refstore, mgr.predeploy)
+    for frame in SyntheticTweets(seed=3).batches(200, plan.batch_size):
+        storage.write(runner.run(frame), lineage=runner.last_versions)
+    job = RepairJob(plan, storage, mgr.refstore, mgr.predeploy)
+    try:
+        mgr.refstore["safety_levels"].upsert(
+            np.arange(20, dtype=np.int64),
+            safety_level=np.full(20, 7, np.int32))
+        now = time.monotonic()
+        versions = {t: mgr.refstore[t].version for t in plan.udf.ref_tables}
+        stale = job._stale_units(versions, now)
+        assert stale
+        assert storage.compact() == 200      # spans shrink under the units
+        repaired = 0
+        for _, since, part, start, n, lin in stale:
+            repaired += job._repair_unit(part, start, n, lin, versions,
+                                         since)
+        # whatever was applied, it was applied consistently: drain to
+        # convergence and check bitwise against from-scratch enrichment
+        assert job.drain(timeout=60)
+        storage.compact()
+        assert_store_current(mgr, storage)
+    finally:
+        job.stop()
+
+
+# ---------------------------------------------------------------------------
+# shim removal (satellite: the deprecated lowering path is gone)
+# ---------------------------------------------------------------------------
+
+def test_start_rejects_shim_but_plans_and_baselines_run_clean():
     mgr = make_manager()
     cfg = FeedConfig(name="dep", udf=Q.Q1, batch_size=50, num_partitions=1)
-    with pytest.warns(DeprecationWarning, match="compatibility shim"):
-        h = mgr.start(cfg, SyntheticAdapter(total=100, frame_size=50))
-    assert h.join(timeout=120).stored == 100
+    with pytest.raises(ValueError, match="pipeline"):
+        mgr.start(cfg, SyntheticAdapter(total=100, frame_size=50))
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         h2 = mgr.submit(q1_plan(mgr, total=100, name="dep2"))
         assert h2.join(timeout=120).stored == 100
 
 
-def test_baseline_frameworks_do_not_warn():
+def test_baseline_frameworks_keep_their_measurement_path():
     mgr = make_manager()
     cfg = FeedConfig(name="base", udf=Q.Q1, batch_size=50,
                      num_partitions=1, framework="balanced")

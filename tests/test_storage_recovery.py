@@ -1,7 +1,9 @@
 """Storage crash-consistency and the vectorized pk index: flush -> reload
-round trips (counts / index / get / per-segment lineage agree), recovery
-from pre-lineage manifests, and the insert-path semantics the sorted-array
-index must preserve bit-for-bit vs the old per-row dict loop.
+round trips (counts / index / get / per-segment lineage / zone maps
+agree), recovery from pre-lineage manifests, the insert-path semantics
+the sorted-array index must preserve bit-for-bit vs the old per-row dict
+loop, and the compaction primitives (dead-row accounting, renumbering,
+epoch fencing, conditional deletes).
 
 Deliberately hypothesis-free: runs in the minimal-install CI job.
 """
@@ -177,6 +179,115 @@ def test_read_rows_spans_segments_and_chunks(tmp_path):
     assert got["id"].shape[0] == 8
     np.testing.assert_array_equal(got["id"][:5], b1["id"][5:])
     np.testing.assert_array_equal(got["id"][5:], b2["id"][:3])
+
+
+def test_zone_maps_flush_recover_round_trip(tmp_path):
+    """Satellite: zone maps persist in the manifest at flush and recover
+    bit-for-bit; pre-zone-map manifests recover with none (never
+    pruned)."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b = batch_of(10, seed=21)
+    p.insert(b, upsert=False, lineage={"t": 1})
+    p.flush()
+    with p._lock:
+        want = list(p._seg_zmaps)
+    assert want[0]["id"] == (int(b["id"].min()), int(b["id"].max()))
+    assert want[0]["lat"] == (float(b["lat"].min()), float(b["lat"].max()))
+    assert "text_tokens" not in want[0]            # 2-D: not range-prunable
+    assert "valid" not in want[0]                  # bool: not range-prunable
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    with fresh._lock:
+        got = list(fresh._seg_zmaps)
+    assert got == want
+    # legacy manifest: no zone_maps key
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    with open(man) as f:
+        manifest = json.load(f)
+    del manifest["zone_maps"]
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+    legacy = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    with legacy._lock:
+        assert legacy._seg_zmaps == [{}]
+    # compact_segment with zero dead rows rebuilds the missing zone maps
+    # in place (no rewrite, no epoch bump)
+    assert legacy.compact_segment(0) == 0
+    assert legacy.epoch == 0
+    with legacy._lock:
+        assert legacy._seg_zmaps == want
+
+
+def test_zone_map_cols_selects_and_sorts(tmp_path):
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10,
+                         zone_map_cols=("country",), sort_key="country")
+    b = batch_of(10, seed=22)
+    p.insert(b, upsert=False, lineage={"t": 1})
+    p.flush()
+    fresh = StoragePartition(0, spill_dir=str(tmp_path),
+                             zone_map_cols=("country",),
+                             sort_key="country").recover()
+    snap = fresh.snapshot_view()
+    try:
+        assert set(snap.units[0].zone_map) == {"country"}
+        cols = snap.units[0].read(("id", "country"))
+        assert (np.diff(cols["country"]) >= 0).all()
+        assert snap.live_mask(cols["id"], 0).all()
+    finally:
+        snap.release()
+    for i in range(10):                        # index follows the sort
+        pk = int(b["id"][i])
+        assert int(fresh.get(pk)["country"]) == int(b["country"][i])
+
+
+def test_compaction_recover_round_trip_and_dead_recount(tmp_path):
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b = batch_of(10, seed=23)
+    p.insert(b, upsert=True, lineage={"t": 1})
+    b2 = {k: v.copy() for k, v in b.items()}
+    b2["country"] = b["country"] + 7
+    p.insert(b2, upsert=True, lineage={"t": 2})    # segment 0 fully dead
+    p.flush()
+    assert p.dead_rows == 10
+    # recovery recomputes dead counters exactly from the rebuilt index
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert fresh.dead_rows == 10
+    assert fresh.compact() == 10
+    assert fresh.dead_rows == 0 and fresh.count == 10
+    assert fresh.rows_total == 10
+    # and the compacted layout itself round-trips
+    again = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert again.count == 10 and again.dead_rows == 0
+    pk = int(b["id"][4])
+    assert int(again.get(pk)["country"]) == int(b["country"][4]) + 7
+    # the emptied segment keeps its (conservative) lineage
+    assert [lin for _, _, lin in again.lineage_units()] == \
+        [{"t": 1}, {"t": 2}]
+
+
+def test_delete_rows_conditional_and_epoch_fencing():
+    p = StoragePartition(0)
+    b = batch_of(10, seed=24)
+    p.insert(b, upsert=True, lineage={"t": 1})
+    scanned = np.arange(3)
+    # a racing ingest upsert supersedes row 0: the delete must spare it
+    newer = {k: v[:1].copy() for k, v in b.items()}
+    p.insert(newer, upsert=True, lineage={"t": 2})
+    assert p.delete_rows(b["id"][:3], scanned) == 2
+    assert p.count == 8
+    assert p.get(int(b["id"][0])) is not None      # the upsert won
+    assert p.get(int(b["id"][1])) is None
+    # epoch fencing: a stale-epoch write (captured before a compaction
+    # renumbered) is rejected wholesale
+    epoch = p.epoch
+    assert p.compact() > 0
+    assert p.epoch > epoch
+    assert p.delete_rows(b["id"][3:5], np.array([3, 4]),
+                         expect_epoch=epoch) == 0
+    fixed = {k: v[3:5].copy() for k, v in b.items()}
+    assert p.repair_rows(fixed, np.array([3, 4]), {"t": 3},
+                         expect_epoch=epoch) == 0
+    assert not p.update_lineage(0, 8, {"t": 3}, expect_epoch=epoch)
+    assert p.count == 8                            # nothing misapplied
 
 
 def test_repair_rows_conditional_on_index():
