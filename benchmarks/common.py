@@ -13,8 +13,7 @@ from __future__ import annotations
 
 import contextlib
 import csv
-import io
-import sys
+import json
 import time
 from typing import Dict, List
 
@@ -35,6 +34,19 @@ def emit(fig: str, name: str, value, unit: str, notes: str = "") -> None:
            "notes": notes}
     ROWS.append(row)
     print(f"{fig},{name},{row['value']},{unit},{notes}", flush=True)
+
+
+def write_json(fig: str, path: str) -> None:
+    """Machine-readable counterpart of the CSV stream: one document per
+    figure, metrics keyed by name — the input format of
+    benchmarks/regression_gate.py (the CI threshold gate)."""
+    metrics = {r["name"]: {"value": r["value"], "unit": r["unit"],
+                           "notes": r["notes"]}
+               for r in ROWS if r["fig"] == fig}
+    with open(path, "w") as f:
+        json.dump({"fig": fig, "metrics": metrics}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
 
 
 def write_csv(path: str) -> None:

@@ -46,9 +46,8 @@ import numpy as np
 
 from benchmarks.common import (BATCH_1X, BATCH_4X, BATCH_16X,
                                add_dispatch_arg, emit, make_manager,
-                               run_feed, set_dispatch)
-from repro.core import (ComputingRunner, ComputingSpec, ElasticSpec,
-                        SyntheticAdapter, pipeline)
+                               run_feed, set_dispatch, write_json)
+from repro.core import ElasticSpec, SyntheticAdapter, pipeline
 from repro.core.enrich import dispatch as D
 from repro.core.enrich import ops
 from repro.core.intake import Adapter
@@ -177,7 +176,7 @@ def bench_chained_plan(mgr, total: int, batch: int = BATCH_1X) -> None:
     builds = {name: st.state_builds
               for name, st in s.computing.per_stage.items()}
     emit(FIG, "chain_q123_fused", s.records_per_s, "rec/s",
-         f"1 fused plan (single predeployed apply/batch), "
+         "1 fused plan (single predeployed apply/batch), "
          f"invocations={s.computing.invocations} vs sequential {seq_inv}; "
          f"per-stage state_builds={builds}")
 
@@ -271,7 +270,7 @@ def bench_elastic(mgr, batch: int = BATCH_1X) -> None:
     e = results["elastic"]
     emit(FIG, "bursty_elastic_vs_best_static",
          e.records_per_s / best_static, "ratio",
-         f"acceptance: >= 0.9 of best static AND "
+         "acceptance: >= 0.9 of best static AND "
          f"worker_s {e.worker_seconds:.2f} < static_hi "
          f"{results['static_hi'].worker_seconds:.2f}")
 
@@ -386,6 +385,11 @@ if __name__ == "__main__":
                     help="bursty square-wave stream: static low/high "
                          "partitions vs the elasticity controller "
                          "(rec/s, p95 backlog, worker-seconds)")
+    ap.add_argument("--json-out", default="BENCH_fig25.json",
+                    help="machine-readable metrics file "
+                         "(empty string disables)")
     args = ap.parse_args()
     main(args.total, args.dispatch, args.probe_rows, args.plan,
          args.elastic)
+    if args.json_out:
+        write_json(FIG, args.json_out)

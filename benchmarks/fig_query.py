@@ -35,12 +35,12 @@ from __future__ import annotations
 import argparse
 import shutil
 import tempfile
-import threading
 import time
 
 import numpy as np
 
-from benchmarks.common import BATCH_1X, emit, make_manager
+from benchmarks.common import (BATCH_1X, emit, make_manager,
+                               write_json)
 from benchmarks.fig_repair import RollingUpdater, join_quiesced
 from repro.core import (CompactionSpec, RepairSpec, SyntheticAdapter, agg,
                         col, pipeline)
@@ -127,7 +127,7 @@ def bench_scan_pruning(mgr, total, batch, spill_dir, reps=7):
          f"{r_on.stats.segments} segments pruned, "
          f"rows_scanned={r_on.stats.rows_scanned}/{wm}")
     emit(FIG, "prune_off_rows_s", thr_off, "rows/s",
-         f"same query, pruning disabled; rows_scanned="
+         "same query, pruning disabled; rows_scanned="
          f"{r_off.stats.rows_scanned}")
     ratio = thr_on / thr_off
     emit(FIG, "prune_speedup", ratio, "ratio",
@@ -180,7 +180,7 @@ def bench_under_ingestion(mgr, total, batch, spill_dir):
     emit(FIG, "live_query_p50_ms",
          1e3 * lat[len(lat) // 2] if lat else 0.0, "ms",
          f"{checks} queries during ingest @20K rec/s with rolling ref "
-         f"updates; repair+compaction active")
+         "updates; repair+compaction active")
     emit(FIG, "live_query_p95_ms",
          1e3 * lat[min(len(lat) - 1, int(0.95 * len(lat)))] if lat
          else 0.0, "ms",
@@ -226,7 +226,7 @@ def bench_compaction(mgr, total, batch, spill_dir, reps=5):
          f"superseded versions after repair churn over {total} rows "
          f"({100.0 * dead / (total + dead):.1f}% of stored versions)")
     emit(FIG, "compaction_reclaim_s", reclaim_s, "s",
-         f"drain to 0 dead rows (100% reclaim asserted); segments "
+         "drain to 0 dead rows (100% reclaim asserted); segments "
          f"rewritten={h.compaction.stats.segments_compacted}")
     emit(FIG, "scan_before_compact_ms", 1e3 * _median(walls_b), "ms",
          f"full-scan group-by over {before.stats.rows_scanned} row "
@@ -234,8 +234,8 @@ def bench_compaction(mgr, total, batch, spill_dir, reps=5):
     emit(FIG, "scan_after_compact_ms", 1e3 * _median(walls_a), "ms",
          f"same query over {after.stats.rows_scanned} live rows "
          f"({after.stats.units} units; unit count is unchanged — "
-         f"compaction rewrites in place, it does not merge, so per-unit "
-         f"overhead persists at tiny segment sizes)")
+         "compaction rewrites in place, it does not merge, so per-unit "
+         "overhead persists at tiny segment sizes)")
 
 
 def main(total: int = 60_000, batch: int = BATCH_1X) -> None:
@@ -255,5 +255,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--total", type=int, default=60_000)
     ap.add_argument("--batch", type=int, default=BATCH_1X)
+    ap.add_argument("--json-out", default="BENCH_fig_query.json",
+                    help="machine-readable metrics file "
+                         "(empty string disables)")
     args = ap.parse_args()
     main(args.total, args.batch)
+    if args.json_out:
+        write_json(FIG, args.json_out)

@@ -31,7 +31,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import BATCH_1X, emit, make_manager
+from benchmarks.common import (BATCH_1X, emit, make_manager,
+                               write_json)
 from benchmarks.fig25_udf_enrichment import ReplayAdapter
 from repro.core import RepairSpec, SyntheticAdapter, pipeline
 from repro.core.enrich import queries as Q
@@ -139,7 +140,7 @@ def bench_currency(mgr, nbase: int, total: int, batch: int,
          f"invocations={r.repair_invocations}")
     mismatches = check_convergence(mgr, h.storage)
     emit(FIG, "currency_converged_mismatches", mismatches, "rows",
-         f"stored vs from-scratch enrichment under the final snapshot "
+         "stored vs from-scratch enrichment under the final snapshot "
          f"over {h.storage.count} rows (must be 0)")
     assert mismatches == 0, mismatches
 
@@ -187,7 +188,7 @@ def bench_interference(mgr, nbase: int, total: int, batch: int,
              f"excluded), rolling updates on;{extra}")
     emit(FIG, "interference_ratio", results["on"] / results["off"],
          "ratio",
-         f"acceptance: >= 0.9 (<= 10% ingestion-throughput loss at "
+         "acceptance: >= 0.9 (<= 10% ingestion-throughput loss at "
          f"budget_rows_s={budget:.0f})")
 
 
@@ -215,6 +216,11 @@ if __name__ == "__main__":
                     help="seconds between rolling ref upserts")
     ap.add_argument("--update-keys", type=int, default=25,
                     help="keys upserted per rolling update")
+    ap.add_argument("--json-out", default="BENCH_fig_repair.json",
+                    help="machine-readable metrics file "
+                         "(empty string disables)")
     args = ap.parse_args()
     main(args.total, args.batch, args.budget, args.update_every,
          args.update_keys)
+    if args.json_out:
+        write_json(FIG, args.json_out)

@@ -1,0 +1,136 @@
+"""Threshold regression gate over the BENCH_*.json metric files.
+
+The fig drivers emit ``BENCH_<fig>.json`` (``--json-out``); this script
+checks each file against per-figure thresholds and exits non-zero on any
+miss — the bench-smoke CI job runs it after the drivers, so a refactor
+that silently rots a measurement path (repair stops converging, pruning
+stops pruning, the elasticity controller stops tracking bursts) fails
+the build instead of rotting a CSV nobody reads.
+
+Two profiles:
+
+``--profile smoke``
+    CI row counts on a shared single-core runner: only *correctness*
+    metrics get tight bounds (convergence mismatches MUST be zero);
+    ratios that compare two timed runs get loose floors — at smoke scale
+    they mostly detect "the axis broke entirely", not perf drift.
+
+``--profile full``
+    Paper-scale local runs: the ratio floors tighten to the values the
+    figures actually claim (interference isolation, zone-map pruning
+    speedup, elastic-vs-static capacity).
+
+A threshold is ``(metric, op, bound)``; a listed metric missing from the
+file is itself a failure (presence is part of the contract — drivers
+renaming a metric must update this gate and the figure docs together).
+
+Usage::
+
+    python benchmarks/regression_gate.py --profile smoke \
+        BENCH_fig_repair.json BENCH_fig_query.json BENCH_fig25.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# (metric, op, bound): op is one of <=, >=, == (exact, for counts).
+Threshold = Tuple[str, str, float]
+
+THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
+    "smoke": {
+        "fig_repair": [
+            # repair MUST converge the store to the final ref snapshot —
+            # scale-independent correctness, not a perf number
+            ("currency_converged_mismatches", "==", 0),
+            # repair on vs off throughput: loose floor (smoke noise)
+            ("interference_ratio", ">=", 0.3),
+        ],
+        "fig_query": [
+            # zone-map pruning must at least not LOSE to full scans
+            ("prune_speedup", ">=", 0.5),
+            # snapshot scans under ingestion stay bounded (smoke: just
+            # "finite and sane", the figure claims the real bound)
+            ("live_query_p95_ms", "<=", 10_000),
+        ],
+        "fig25": [
+            # the controller must reach a usable fraction of the best
+            # static allocation even on a noisy shared core
+            ("bursty_elastic_vs_best_static", ">=", 0.3),
+        ],
+    },
+    "full": {
+        "fig_repair": [
+            ("currency_converged_mismatches", "==", 0),
+            # budgeted repair should barely dent ingest capacity
+            ("interference_ratio", ">=", 0.9),
+        ],
+        "fig_query": [
+            ("prune_speedup", ">=", 2.0),
+            ("live_query_p95_ms", "<=", 1_000),
+        ],
+        "fig25": [
+            ("bursty_elastic_vs_best_static", ">=", 0.9),
+        ],
+    },
+}
+
+_OPS = {
+    "<=": lambda v, b: v <= b,
+    ">=": lambda v, b: v >= b,
+    "==": lambda v, b: v == b,
+}
+
+
+def check_file(path: str, profile: str) -> List[str]:
+    """Return human-readable failure strings for one BENCH_*.json."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    fig = doc.get("fig")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        return [f"{path}: no 'metrics' object"]
+    thresholds = THRESHOLDS[profile].get(fig)
+    if thresholds is None:
+        return [f"{path}: unknown fig {fig!r} (gate has no thresholds; "
+                "add them to benchmarks/regression_gate.py)"]
+    fails = []
+    for name, op, bound in thresholds:
+        if name not in metrics:
+            fails.append(f"{path}: required metric {name!r} missing")
+            continue
+        value = metrics[name]["value"]
+        if not isinstance(value, (int, float)):
+            fails.append(f"{path}: {name} is non-numeric ({value!r})")
+        elif not _OPS[op](value, bound):
+            fails.append(f"{path}: {name} = {value} violates "
+                         f"'{op} {bound}' ({profile} profile)")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--profile", choices=sorted(THRESHOLDS),
+                    default="smoke")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for path in args.files:
+        failures.extend(check_file(path, args.profile))
+    for f in failures:
+        print(f"GATE FAIL {f}")
+    n = len(args.files)
+    if not failures:
+        print(f"regression gate: {n} file(s) pass the "
+              f"{args.profile} profile")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,7 +41,7 @@ def main() -> None:
         emit(FIG, f"{cell}_useful_ratio", round(r["useful_ratio"], 3), "",
              r["model_flops_formula"])
         emit(FIG, f"{cell}_hbm_fit", int(r["hbm_fit"]), "bool",
-             f"arg+temp+out GB/dev="
+             "arg+temp+out GB/dev="
              f"{(r['arg_bytes_per_dev'] + r['temp_bytes_per_dev'] + r['out_bytes_per_dev']) / 1e9:.1f}")
 
 

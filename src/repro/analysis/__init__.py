@@ -1,0 +1,18 @@
+"""Static concurrency-invariant analysis for the ingestion core.
+
+``feedlint`` (repro.analysis.feedlint) is a custom ``ast``-based analyzer
+that machine-checks the lock discipline the concurrent core relies on —
+guarded-field access, the inter-module lock acquisition order, no blocking
+work under a lock, epoch-fenced conditional storage writes, and listener
+callbacks fired outside the write lock.  The annotation grammar and the
+canonical lock hierarchy live in repro.analysis.annotations; the full
+human story is docs/CONCURRENCY.md.
+
+Run it as::
+
+    python -m repro.analysis.feedlint src/
+
+It is wired as a blocking CI job; a clean tree exits 0.
+"""
+
+from repro.analysis.annotations import LOCK_ORDER, guarded_by  # noqa: F401

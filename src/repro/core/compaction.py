@@ -90,10 +90,12 @@ class CompactionJob(threading.Thread):
         self.handle = handle      # duck-typed FeedHandle (None in tests)
         self.stats = CompactionStats()
         self.error: Optional[BaseException] = None
-        self._step_lock = threading.Lock()
+        # serializes step(); dedicated background lock — the segment
+        # rewrites it triggers block under the partition lock by design
+        self._step_lock = threading.Lock()  # lock-name: compaction-step blocking-ok
         self._stop_evt = threading.Event()
-        self._tokens = spec.budget_rows_s * spec.burst_s
-        self._last_refill = time.monotonic()
+        self._tokens = spec.budget_rows_s * spec.burst_s  # guarded-by: _step_lock
+        self._last_refill = time.monotonic()              # guarded-by: _step_lock
 
     # ----------------------------------------------------------- scheduling
     def run(self) -> None:
@@ -107,7 +109,7 @@ class CompactionJob(threading.Thread):
     def stop(self) -> None:
         self._stop_evt.set()
 
-    def _refill(self, now: float) -> None:
+    def _refill(self, now: float) -> None:  # requires-lock: _step_lock
         cap = self.spec.budget_rows_s * self.spec.burst_s
         self._tokens = min(cap, self._tokens + (now - self._last_refill)
                            * self.spec.budget_rows_s)

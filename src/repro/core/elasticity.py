@@ -60,7 +60,7 @@ class ElasticSpec:
     def __post_init__(self):
         if not (1 <= self.min_partitions <= self.max_partitions):
             raise ValueError(
-                f"elastic bounds must satisfy 1 <= min <= max, got "
+                "elastic bounds must satisfy 1 <= min <= max, got "
                 f"min={self.min_partitions} max={self.max_partitions}")
         if self.interval_s <= 0 or self.cooldown_s < 0:
             raise ValueError("interval_s must be > 0, cooldown_s >= 0")
@@ -105,13 +105,13 @@ class ElasticityController(threading.Thread):
         super().__init__(name=f"{name}-controller", daemon=True)
         self.handle = handle
         self.batch_size = max(1, batch_size)
-        self.samples: List[GroupSample] = []
-        self.decisions: List[Decision] = []
+        self.samples: List[GroupSample] = []    # guarded-by: _lock
+        self.decisions: List[Decision] = []     # guarded-by: _lock
         self._stop_evt = threading.Event()
         self._up_ticks: Dict[int, int] = {}
         self._down_ticks: Dict[int, int] = {}
         self._last_action: Dict[int, float] = {}
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()           # lock-name: controller
 
     # ----------------------------------------------------------- the loop
     def run(self) -> None:

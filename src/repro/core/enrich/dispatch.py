@@ -77,8 +77,8 @@ class DispatchConfig:
 
 
 _config = DispatchConfig()
-_stats_lock = threading.Lock()
-_bucket_hits: Dict[Tuple[str, int], int] = {}
+_stats_lock = threading.Lock()              # lock-name: dispatch-stats
+_bucket_hits: Dict[Tuple[str, int], int] = {}   # guarded-by: _stats_lock
 
 
 def configure(min_pallas_rows: Optional[int] = None,

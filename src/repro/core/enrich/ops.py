@@ -25,7 +25,6 @@ tiny batches, CPU-only runs, or mode="reference".
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

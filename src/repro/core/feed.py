@@ -79,9 +79,6 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-import jax
-import numpy as np
-
 from repro.core import records
 from repro.core.compaction import CompactionJob, CompactionStats
 from repro.core.computing import ComputingRunner, ComputingSpec, \
@@ -91,7 +88,7 @@ from repro.core.enrich.queries import EnrichUDF
 from repro.core.intake import Adapter, IntakeJob
 from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
-                                         PartitionHolderManager, STOP,
+                                         PartitionHolderManager,
                                          StopRecord, frame_bytes,
                                          frame_rows)
 from repro.core.plan import IngestPlan, Pipeline, StageGroup
@@ -292,16 +289,20 @@ class FeedHandle:
         self.compaction: Optional[CompactionJob] = None
         self.stats = FeedStats()
         self._t0 = 0.0
-        self._lock = threading.Lock()
-        self._worker_errs: List[BaseException] = []
-        self._invocation_counter = 0
-        self._live_workers = 0
+        self._lock = threading.Lock()               # lock-name: handle
+        # appended by worker threads under the lock; read lock-free from
+        # join() only after every worker thread has exited
+        self._worker_errs: List[BaseException] = []  # write-guarded-by: _lock
+        self._invocation_counter = 0                 # guarded-by: _lock
+        self._live_workers = 0                       # guarded-by: _lock
         self._finalized = False
         self._deregistered = False
         self._sinks_dead = False    # all sink consumers failed: discard
         # ComputingStats of workers retired by scale_down, merged here the
         # moment the worker exits so no invocation/record count can vanish
-        self._retired_computing = ComputingStats()
+        # merged under the lock at worker exit; read lock-free by
+        # _finalize() after join() proved all workers are gone
+        self._retired_computing = ComputingStats()  # write-guarded-by: _lock
 
     # ------------------------------------------------------------- lifecycle
     def stop(self) -> None:
@@ -420,8 +421,9 @@ class FeedHandle:
             all_holders.extend(self.holders)
         for h in all_holders:
             hm.unregister(h.holder_id)
-        if self.manager.feeds.get(self.cfg.name) is self:
-            del self.manager.feeds[self.cfg.name]
+        with self.manager._lock:
+            if self.manager.feeds.get(self.cfg.name) is self:
+                del self.manager.feeds[self.cfg.name]
 
     # --------------------------------------------------------------- queries
     def query(self):
@@ -495,7 +497,8 @@ class FeedHandle:
                 "measurement rigs")
         return self.stage_groups[stage]
 
-    def _add_partition_locked(self, group: _StageGroupRuntime) -> None:
+    def _add_partition_locked(self,  # requires-lock: _lock
+                              group: _StageGroupRuntime) -> None:
         """Create holder + runner + worker for one new partition of
         ``group``.  Caller holds ``self._lock``."""
         pid = group.next_pid          # monotonic: retired ids never reused
@@ -634,7 +637,10 @@ class FeedHandle:
                     self._sinks_dead = True
                     self.adapter.stop()
         except BaseException as e:
-            self._worker_errs.append(e)
+            # feedlint R1 fix: error collection races join()'s liveness
+            # checks without the lock
+            with self._lock:
+                self._worker_errs.append(e)
         finally:
             self._on_worker_exit(group, slot)
 
@@ -704,7 +710,8 @@ class FeedManager:
         self.refstore = refstore or RefStore()
         self.predeploy = PredeployCache()
         self.holder_manager = PartitionHolderManager()
-        self.feeds: Dict[str, FeedHandle] = {}
+        self._lock = threading.Lock()           # lock-name: manager
+        self.feeds: Dict[str, FeedHandle] = {}  # guarded-by: _lock
 
     # --------------------------------------------------------------- submit
     def submit(self, plan) -> FeedHandle:
@@ -715,10 +722,8 @@ class FeedManager:
         if isinstance(plan, Pipeline):
             plan = plan.compile(self.refstore)
         if not isinstance(plan, IngestPlan):
-            raise TypeError(f"submit() takes an IngestPlan or Pipeline, "
+            raise TypeError("submit() takes an IngestPlan or Pipeline, "
                             f"got {type(plan).__name__}")
-        if plan.name in self.feeds:
-            raise KeyError(f"feed {plan.name} already active")
         cfg = FeedConfig(
             name=plan.name, udf=plan.udf, batch_size=plan.batch_size,
             num_partitions=plan.num_partitions, model=plan.model,
@@ -730,7 +735,12 @@ class FeedManager:
             coalesce_bytes=plan.coalesce_bytes,
             fault_hook=plan.fault_hook, elastic=plan.elastic)
         handle = FeedHandle(cfg, self, plan.adapter, plan=plan)
-        self.feeds[plan.name] = handle
+        # feedlint R1 fix: check-then-insert is one critical section, so
+        # two racing submits of the same name cannot both win
+        with self._lock:
+            if plan.name in self.feeds:
+                raise KeyError(f"feed {plan.name} already active")
+            self.feeds[plan.name] = handle
         handle._t0 = time.perf_counter()
         self._start_new(cfg, handle, plan)
         return handle
@@ -751,10 +761,11 @@ class FeedManager:
                 "feed with pipeline(adapter).parse(...)....store()/"
                 ".tee(...) and FeedManager.submit instead")
 
-        if cfg.name in self.feeds:
-            raise KeyError(f"feed {cfg.name} already active")
         handle = FeedHandle(cfg, self, adapter)
-        self.feeds[cfg.name] = handle
+        with self._lock:
+            if cfg.name in self.feeds:
+                raise KeyError(f"feed {cfg.name} already active")
+            self.feeds[cfg.name] = handle
         handle._t0 = time.perf_counter()
         nstore = cfg.storage_partitions or cfg.num_partitions
         handle.storage = StorageJob(nstore, cfg.spill_dir, cfg.upsert)
@@ -867,7 +878,8 @@ class FeedManager:
                     out = runner.run(frame)       # parse+enrich chained
                     handle.storage.write(out)     # ... with storage
             except BaseException as e:
-                handle._worker_errs.append(e)
+                with handle._lock:
+                    handle._worker_errs.append(e)
 
         for i, h in enumerate(handle.holders):
             runner = ComputingRunner(spec, self.refstore, self.predeploy)
@@ -901,7 +913,8 @@ class FeedManager:
                         handle.stats.frames_in += 1
                         handle.stats.records_in += _frame_rows(frame)
             except BaseException as e:
-                handle._worker_errs.append(e)
+                with handle._lock:
+                    handle._worker_errs.append(e)
 
         w = threading.Thread(target=loop, name=f"{cfg.name}-insert",
                              daemon=True)
@@ -909,5 +922,7 @@ class FeedManager:
         w.start()
 
     def stop_all(self) -> None:
-        for h in self.feeds.values():
+        with self._lock:
+            handles = list(self.feeds.values())
+        for h in handles:
             h.stop()

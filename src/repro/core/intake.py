@@ -13,7 +13,7 @@ from __future__ import annotations
 import socket
 import threading
 import time
-from typing import Iterable, Iterator, List, Optional
+from typing import Iterator, List, Optional
 
 from repro.core.partition_holder import PartitionHolder
 from repro.core.records import SyntheticTweets, batch_rows
@@ -145,9 +145,12 @@ class IntakeJob(threading.Thread):
         self.holders = holders
         self.frames_in = 0
         self.records_in = 0
-        self.closing = False
+        self.closing = False     # guarded-by: _lock
         self.error: Optional[BaseException] = None
-        self._lock = lock or threading.Lock()
+        # the decoupled path passes the feed-handle lock in, so
+        # scale_up's closing check and the drain flip serialize on
+        # the SAME lock; the coupled baseline gets a private one
+        self._lock = lock or threading.Lock()   # lock-name: handle
 
     def run(self) -> None:
         try:

@@ -64,16 +64,17 @@ class PartitionHolder:
     def __init__(self, holder_id: Tuple[str, int], capacity: int = 16):
         self.holder_id = holder_id
         self.capacity = capacity
-        self._q: collections.deque = collections.deque()
-        self._lock = threading.Lock()
+        self._q: collections.deque = collections.deque()  # guarded-by: _lock
+        self._lock = threading.Lock()       # lock-name: holder
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
-        self._closed = False
-        # metrics
-        self.pushed = 0
-        self.pulled = 0
-        self.push_wait_s = 0.0
-        self.pull_wait_s = 0.0
+        self._closed = False                # guarded-by: _lock
+        # metrics: mutated under the holder lock by producers/consumers,
+        # read lock-free by stats collection after join
+        self.pushed = 0                     # write-guarded-by: _lock
+        self.pulled = 0                     # write-guarded-by: _lock
+        self.push_wait_s = 0.0              # write-guarded-by: _lock
+        self.pull_wait_s = 0.0              # write-guarded-by: _lock
         self.service_ewma_s = 0.0   # updated by consumers via record_service
 
     # ------------------------------------------------------------------ push
@@ -239,8 +240,8 @@ class PartitionHolderManager:
     """Per-node registry: jobs look up the holders of other jobs by ID."""
 
     def __init__(self):
-        self._holders: Dict[Tuple[str, int], PartitionHolder] = {}
-        self._lock = threading.Lock()
+        self._holders: Dict[Tuple[str, int], PartitionHolder] = {}  # guarded-by: _lock
+        self._lock = threading.Lock()       # lock-name: holder-registry
 
     def register(self, holder: PartitionHolder) -> PartitionHolder:
         with self._lock:
@@ -250,7 +251,9 @@ class PartitionHolderManager:
             return holder
 
     def lookup(self, job: str, partition: int) -> PartitionHolder:
-        return self._holders[(job, partition)]
+        # feedlint R1 fix: this read used to race register/unregister
+        with self._lock:
+            return self._holders[(job, partition)]
 
     def partitions(self, job: str) -> List[PartitionHolder]:
         with self._lock:

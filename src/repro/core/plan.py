@@ -121,7 +121,7 @@ def _coerce_elastic(value) -> Optional[ElasticSpec]:
             return ElasticSpec(**value)
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid elastic spec {value!r}: {e}") from e
-    raise PlanError(f"elastic must be an ElasticSpec or dict, got "
+    raise PlanError("elastic must be an ElasticSpec or dict, got "
                     f"{type(value).__name__}")
 
 
@@ -133,7 +133,7 @@ def _coerce_repair(value) -> Optional[RepairSpec]:
             return RepairSpec(**value)
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid refresh spec {value!r}: {e}") from e
-    raise PlanError(f"store(refresh=...) takes a RepairSpec or dict, got "
+    raise PlanError("store(refresh=...) takes a RepairSpec or dict, got "
                     f"{type(value).__name__}")
 
 
@@ -145,7 +145,7 @@ def _coerce_compact(value) -> Optional[CompactionSpec]:
             return CompactionSpec(**value)
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid compact spec {value!r}: {e}") from e
-    raise PlanError(f"store(compact=...) takes a CompactionSpec or dict, "
+    raise PlanError("store(compact=...) takes a CompactionSpec or dict, "
                     f"got {type(value).__name__}")
 
 
@@ -316,7 +316,7 @@ class Pipeline:
                     <= g.elastic.max_partitions):
                 raise PlanError(
                     f"stage group {g.name!r}: partitions={g.partitions} "
-                    f"outside elastic bounds "
+                    "outside elastic bounds "
                     f"[{g.elastic.min_partitions}, "
                     f"{g.elastic.max_partitions}]")
         self._check_repair(fused, sinks, project_cols, groups)
@@ -397,8 +397,8 @@ class Pipeline:
                        if c not in project_cols]
             if missing:
                 raise PlanError(
-                    f"store(refresh=...) needs every input schema column "
-                    f"stored so rows can be re-enriched from scratch; "
+                    "store(refresh=...) needs every input schema column "
+                    "stored so rows can be re-enriched from scratch; "
                     f"project() drops {missing}")
 
     def _check_store(self, sinks, delivered) -> None:
@@ -431,12 +431,12 @@ class Pipeline:
             if kind in ("enrich", "filter", "project") and seen_sink:
                 raise PlanError(
                     f"{kind}() after a sink stage (tee/store): transform "
-                    f"stages must precede all sinks")
+                    "stages must precede all sinks")
             if kind == "enrich":
                 udf, _, _ = payload
                 if not isinstance(udf, EnrichUDF):
                     raise PlanError(
-                        f"enrich() takes an EnrichUDF, got "
+                        "enrich() takes an EnrichUDF, got "
                         f"{type(udf).__name__}")
                 udfs.append(payload)
             elif kind == "filter":
@@ -485,7 +485,7 @@ class Pipeline:
                 raise PlanError(
                     f"stage {stage.name!r} references missing reference "
                     f"table(s) {missing}: create/populate them in the "
-                    f"RefStore before compiling the plan")
+                    "RefStore before compiling the plan")
 
 
 def _batch_struct(batch_size: int) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -530,7 +530,7 @@ def _validate_dtypes(fused: Optional[EnrichUDF], refstore: RefStore,
         except Exception as e:
             raise PlanError(
                 f"stage {stage.name!r} failed dtype/shape validation "
-                f"against the tweet schema and current reference tables: "
+                "against the tweet schema and current reference tables: "
                 f"{type(e).__name__}: {e}") from e
         if not isinstance(out, dict):
             raise PlanError(

@@ -40,16 +40,16 @@ class PredeployCache:
     """Executable cache keyed by (job name, operand signature)."""
 
     def __init__(self):
-        self._cache: Dict[Tuple, Any] = {}
-        self._lock = threading.Lock()
-        self.compiles = 0
-        self.invocations = 0
-        self.compile_s = 0.0
+        self._cache: Dict[Tuple, Any] = {}  # guarded-by: _lock
+        self._lock = threading.Lock()        # lock-name: predeploy
+        self.compiles = 0                    # guarded-by: _lock
+        self.invocations = 0                 # guarded-by: _lock
+        self.compile_s = 0.0                 # guarded-by: _lock
         # per-job-name breakdown: tests pin down that a fused chain is ONE
         # apply executable (one compile per shape) instead of one per stage
-        self.by_name: Dict[str, Dict[str, int]] = {}
+        self.by_name: Dict[str, Dict[str, int]] = {}  # guarded-by: _lock
 
-    def _name_stats(self, name: str) -> Dict[str, int]:
+    def _name_stats(self, name: str) -> Dict[str, int]:  # requires-lock: _lock
         s = self.by_name.get(name)
         if s is None:
             s = self.by_name[name] = {"compiles": 0, "invocations": 0}

@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -99,7 +99,7 @@ def _as_pred(p) -> Predicate:
     if callable(p):
         return _Raw(p)
     raise QueryError(f"not a predicate: {p!r} (use col(...) comparisons "
-                     f"or a callable over the column dict)")
+                     "or a callable over the column dict)")
 
 
 class _Cmp(Predicate):
@@ -412,7 +412,7 @@ class _GroupedAggregator:
                     raise QueryError(
                         f"topk column {a.column!r} must be integer "
                         f"(dtype {v.dtype}): ranking follows the "
-                        f"segment_topk integer-composite contract")
+                        "segment_topk integer-composite contract")
                 if v.size and int(v.max()) > np.iinfo(np.int32).max:
                     # BOTH segment_topk paths rank within [0, 2^31):
                     # the reference's composite key saturates there and
@@ -420,8 +420,8 @@ class _GroupedAggregator:
                     # would silently tie at the top, so fail loudly
                     raise QueryError(
                         f"topk column {a.column!r} holds values above "
-                        f"int32 range; segment_topk ranks within "
-                        f"[0, 2^31) (negatives rank as 0)")
+                        "int32 range; segment_topk ranks within "
+                        "[0, 2^31) (negatives rank as 0)")
                 # keep the native width: dispatch routes 64-bit (and
                 # unsigned) dtypes to the reference path, never through
                 # an int32 wrap

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List
 
 import numpy as np
 

@@ -75,10 +75,11 @@ class RefTable:
         self.name = name
         self.capacity = int(capacity)
         self.schema = {k: np.dtype(v) for k, v in schema.items()}
-        self._lock = threading.Lock()
-        self._build_lock = threading.Lock()   # readers only; never writers
-        self._version = 0
-        self._size = 0
+        self._lock = threading.Lock()         # lock-name: ref-table
+        # readers only; never writers          # lock-name: ref-build
+        self._build_lock = threading.Lock()
+        self._version = 0                      # guarded-by: _lock
+        self._size = 0                         # guarded-by: _lock
         self._key = np.full((capacity,), KEY_SENTINEL, np.int64)
         self._cols = {k: np.zeros((capacity,) if np.dtype(v).shape == ()
                                   else (capacity,), v)
@@ -88,8 +89,8 @@ class RefTable:
             if v.subdtype is not None:
                 base, shape = v.subdtype
                 self._cols[k] = np.zeros((capacity,) + shape, base)
-        self._snapshot: Optional[RefSnapshot] = None
-        self._listeners: List[ChangeListener] = []
+        self._snapshot: Optional[RefSnapshot] = None   # guarded-by: _lock
+        self._listeners: List[ChangeListener] = []  # guarded-by: _lock — listener-registry
 
     # -------------------------------------------------------- change events
     def add_listener(self, fn: ChangeListener) -> None:
@@ -105,7 +106,7 @@ class RefTable:
             if fn in self._listeners:
                 self._listeners.remove(fn)
 
-    def _notify(self, version: int, keys: np.ndarray,
+    def _notify(self, version: int, keys: np.ndarray,  # fires-listeners
                 listeners: List[ChangeListener]) -> None:
         for fn in listeners:
             fn(self.name, version, keys)
@@ -169,7 +170,10 @@ class RefTable:
     # ------------------------------------------------------------- snapshot
     def snapshot(self) -> RefSnapshot:
         """Sorted-by-key immutable view; cached until the next write."""
-        snap = self._snapshot          # atomic ref read (GIL)
+        # feedlint: allow[guarded-field] double-checked fast path: a
+        # torn read is impossible (GIL-atomic ref), a stale one only
+        # costs the slow path below
+        snap = self._snapshot
         if snap is not None:
             return snap
         # one builder at a time: concurrent readers wait for the winner's
@@ -211,8 +215,10 @@ class RefStore:
     paper rebuilds every batch unconditionally)."""
 
     def __init__(self):
-        self._tables: Dict[str, RefTable] = {}
-        self._lock = threading.Lock()
+        # write-guarded: create() mutates under the lock; lookups are
+        # lock-free dict reads (GIL-atomic) on the hot enrichment path
+        self._tables: Dict[str, RefTable] = {}  # write-guarded-by: _lock
+        self._lock = threading.Lock()           # lock-name: ref-store
 
     def create(self, name: str, capacity: int,
                schema: Dict[str, np.dtype]) -> RefTable:

@@ -205,18 +205,24 @@ class RepairJob(threading.Thread):
             ComputingSpec(plan.udf, plan.batch_size, "per_batch", "version"),
             refstore, predeploy)
         self._events: Dict[str, List[_RefEvent]] = {t: [] for t
-                                                    in self._tables}
-        self._events_lock = threading.Lock()
-        self._step_lock = threading.Lock()
+                                                    in self._tables}  # guarded-by: _events_lock
+        self._events_lock = threading.Lock()   # lock-name: repair-events
+        # serializes step(); a dedicated background lock, so blocking work
+        # (scans, re-enrichment dispatch) under it is by design
+        self._step_lock = threading.Lock()     # lock-name: repair-step blocking-ok
         self._wake = threading.Event()
         self._stop_evt = threading.Event()
-        self._tokens = spec.budget_rows_s * spec.burst_s
-        self._last_refill = time.monotonic()
+        self._tokens = spec.budget_rows_s * spec.burst_s  # guarded-by: _step_lock
+        self._last_refill = time.monotonic()              # guarded-by: _step_lock
         # event-driven fast path: scanning every partition's lineage units
         # is cheap but not free — skip it entirely until a ref write (or
         # new stored data racing one) can have made something stale
+        # _maybe_stale is a benign monotonic hint: set lock-free by
+        # writers (_on_change), consumed under the step lock; a lost
+        # update only costs one extra scan pass (left unguarded on
+        # purpose — see docs/CONCURRENCY.md)
         self._maybe_stale = True
-        self._clean_rows = -1
+        self._clean_rows = -1                             # guarded-by: _step_lock
         # arrival time of the oldest ref change not yet fully serviced
         # (cleared on a clean pass) — drives the max_lag_s SLO override
         self._oldest_pending: Optional[float] = None
@@ -300,7 +306,7 @@ class RepairJob(threading.Thread):
         return feed_busy(
             h, self.spec.yield_backlog_batches * self.plan.batch_size)
 
-    def _refill(self, now: float) -> None:
+    def _refill(self, now: float) -> None:  # requires-lock: _step_lock
         cap = self.spec.budget_rows_s * self.spec.burst_s
         self._tokens = min(cap, self._tokens + (now - self._last_refill)
                            * self.spec.budget_rows_s)

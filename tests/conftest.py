@@ -1,0 +1,25 @@
+"""Shared test configuration.
+
+``REQUIRE_HYPOTHESIS=1`` (set by the full CI job, which installs the
+``.[test]`` extras) turns the four property-test modules' polite
+``pytest.importorskip("hypothesis")`` into a hard failure when the
+library is absent — so a broken extras install surfaces as a red build
+instead of 4 silently-skipped modules that *look* like coverage.
+Minimal installs (the plan-api CI job, bare containers) leave the
+variable unset and keep the graceful skip.
+"""
+
+import os
+
+import pytest
+
+
+def pytest_configure(config):
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        try:
+            import hypothesis  # noqa: F401
+        except ImportError as e:
+            raise pytest.UsageError(
+                "REQUIRE_HYPOTHESIS is set but hypothesis is not "
+                "importable — the property-test modules would silently "
+                f"skip; install the .[test] extras ({e})")

@@ -1,0 +1,114 @@
+"""Bench JSON emission + the threshold regression gate.
+
+Synthetic BENCH_*.json documents (no driver runs: the drivers exercise
+themselves in the bench-smoke CI job) through benchmarks/regression_gate
+in-process, plus the write_json shape contract the gate consumes.
+
+Deliberately hypothesis-free: runs in the minimal-install CI job.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))   # benchmarks/ is not an installed package
+
+from benchmarks import common                         # noqa: E402
+from benchmarks.regression_gate import (THRESHOLDS,   # noqa: E402
+                                        check_file, main)
+
+
+def bench_doc(tmp_path, fig, metrics, name=None):
+    doc = {"fig": fig,
+           "metrics": {k: {"value": v, "unit": "x", "notes": ""}
+                       for k, v in metrics.items()}}
+    f = tmp_path / (name or f"BENCH_{fig}.json")
+    f.write_text(json.dumps(doc))
+    return str(f)
+
+
+GOOD = {
+    "fig_repair": {"currency_converged_mismatches": 0,
+                   "currency_stale_rows": 0,
+                   "interference_ratio": 0.97},
+    "fig_query": {"prune_speedup": 3.2, "live_query_p95_ms": 40.0},
+    "fig25": {"bursty_elastic_vs_best_static": 1.1},
+}
+
+
+def test_gate_passes_healthy_metrics_on_both_profiles(tmp_path):
+    files = [bench_doc(tmp_path, fig, m) for fig, m in GOOD.items()]
+    for profile in ("smoke", "full"):
+        for f in files:
+            assert check_file(f, profile) == [], (f, profile)
+    assert main(["--profile", "smoke", *files]) == 0
+
+
+def test_gate_fails_on_convergence_regression(tmp_path):
+    bad = dict(GOOD["fig_repair"], currency_converged_mismatches=3)
+    f = bench_doc(tmp_path, "fig_repair", bad)
+    fails = check_file(f, "smoke")
+    assert len(fails) == 1 and "currency_converged_mismatches" in fails[0]
+    assert main(["--profile", "smoke", f]) == 1
+
+
+def test_gate_fails_on_ratio_floor_and_latency_ceiling(tmp_path):
+    f = bench_doc(tmp_path, "fig_query",
+                  {"prune_speedup": 0.2, "live_query_p95_ms": 99_999.0})
+    fails = check_file(f, "smoke")
+    assert len(fails) == 2
+
+
+def test_full_profile_is_strictly_tighter(tmp_path):
+    # passes smoke, fails full: the drift band the two profiles bracket
+    f = bench_doc(tmp_path, "fig_repair",
+                  dict(GOOD["fig_repair"], interference_ratio=0.5))
+    assert check_file(f, "smoke") == []
+    assert len(check_file(f, "full")) == 1
+
+
+def test_missing_required_metric_is_a_failure(tmp_path):
+    m = dict(GOOD["fig_repair"])
+    del m["interference_ratio"]
+    f = bench_doc(tmp_path, "fig_repair", m)
+    fails = check_file(f, "smoke")
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_unknown_fig_and_unreadable_file_fail(tmp_path):
+    f = bench_doc(tmp_path, "fig_nonexistent", {"x": 1})
+    assert any("unknown fig" in s for s in check_file(f, "smoke"))
+    g = tmp_path / "not_json.json"
+    g.write_text("{")
+    assert any("unreadable" in s for s in check_file(str(g), "smoke"))
+
+
+def test_every_threshold_metric_is_emitted_by_its_driver():
+    """Presence contract: each gated metric name appears literally in its
+    driver source (an emit(...) rename must update the gate too)."""
+    src = {
+        "fig_repair": (REPO / "benchmarks" / "fig_repair.py").read_text(),
+        "fig_query": (REPO / "benchmarks" / "fig_query.py").read_text(),
+        "fig25": (REPO / "benchmarks" /
+                  "fig25_udf_enrichment.py").read_text(),
+    }
+    for profile in THRESHOLDS:
+        for fig, rows in THRESHOLDS[profile].items():
+            for name, _, _ in rows:
+                assert f'"{name}"' in src[fig], (profile, fig, name)
+
+
+def test_write_json_shape_matches_gate_contract(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "ROWS", [])
+    common.emit("figX", "alpha", 1.234567891, "rec/s", "n1")
+    common.emit("figX", "beta", 7, "rows", "")
+    common.emit("figOther", "gamma", 1.0, "x", "")   # filtered out
+    out = tmp_path / "BENCH_figX.json"
+    common.write_json("figX", str(out))
+    doc = json.loads(out.read_text())
+    assert doc["fig"] == "figX"
+    assert set(doc["metrics"]) == {"alpha", "beta"}
+    assert doc["metrics"]["alpha"] == {"value": 1.234568,
+                                       "unit": "rec/s", "notes": "n1"}
+    assert doc["metrics"]["beta"]["value"] == 7
