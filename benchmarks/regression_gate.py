@@ -61,6 +61,16 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
             # static allocation even on a noisy shared core
             ("bursty_elastic_vs_best_static", ">=", 0.3),
         ],
+        "fig_recovery": [
+            # exactly-once across SIGKILL/restart is scale-independent
+            # correctness: zero at every scale, no looseness
+            ("rows_lost_total", "==", 0),
+            ("rows_duplicated_total", "==", 0),
+            # recovery must complete, but a shared runner gets slack
+            ("recovery_max_s", "<=", 120),
+            # WAL-on vs WAL-off throughput: loose smoke floor
+            ("durable_throughput_ratio", ">=", 0.3),
+        ],
     },
     "full": {
         "fig_repair": [
@@ -74,6 +84,14 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
         ],
         "fig25": [
             ("bursty_elastic_vs_best_static", ">=", 0.9),
+        ],
+        "fig_recovery": [
+            ("rows_lost_total", "==", 0),
+            ("rows_duplicated_total", "==", 0),
+            ("recovery_max_s", "<=", 30),
+            # the WAL at default interval fsync costs <= 10% of
+            # steady-state ingest (final-checkpoint drain excluded)
+            ("durable_throughput_ratio", ">=", 0.9),
         ],
     },
 }

@@ -85,6 +85,16 @@ LOCK_ORDER: List[Tuple[str, str]] = [
     # RefTable.snapshot: the build lock admits one column-sort at a time
     # and takes the table write lock briefly at both ends.
     ("ref-build", "ref-table"),
+    # CheckpointJob.step (core/durability.py) serializes on
+    # checkpoint-step, then syncs the WAL, reads the ledger, flushes
+    # storage partitions, and snapshots repair's event journal plus
+    # reference-table fingerprints/versions for the checkpoint record.
+    ("checkpoint-step", "wal"),
+    ("checkpoint-step", "wal-ledger"),
+    ("checkpoint-step", "partition"),
+    ("checkpoint-step", "repair-events"),
+    ("checkpoint-step", "ref-table"),
+    ("checkpoint-step", "ref-build"),
 ]
 
 

@@ -13,6 +13,13 @@ from repro.core.computing import (  # noqa: F401
     ComputingSpec,
     ComputingStats,
 )
+from repro.core.durability import (  # noqa: F401
+    CheckpointStore,
+    DurableSpec,
+    FrameLedger,
+    IntakeLog,
+    ref_fingerprint,
+)
 from repro.core.elasticity import (  # noqa: F401
     ElasticityController,
     ElasticSpec,
@@ -31,8 +38,10 @@ from repro.core.intake import (  # noqa: F401
     Adapter,
     FileAdapter,
     IntakeJob,
+    NotResumableError,
     SocketAdapter,
     SyntheticAdapter,
+    TrackedFrame,
 )
 from repro.core.partition_holder import (  # noqa: F401
     STOP,

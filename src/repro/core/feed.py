@@ -77,15 +77,16 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import records
 from repro.core.compaction import CompactionJob, CompactionStats
 from repro.core.computing import ComputingRunner, ComputingSpec, \
     ComputingStats
+from repro.core.durability import DurabilityRuntime
 from repro.core.elasticity import ElasticityController, ElasticSpec
 from repro.core.enrich.queries import EnrichUDF
-from repro.core.intake import Adapter, IntakeJob
+from repro.core.intake import Adapter, IntakeJob, TrackedFrame
 from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
                                          PartitionHolderManager,
@@ -103,14 +104,24 @@ from repro.core.storage import StorageJob
 COALESCE_DEFAULT_BATCHES = 4
 
 
-def _store_consumer(storage: StorageJob) -> Callable:
+def _store_consumer(storage: StorageJob, ledger=None) -> Callable:
     """Storage-sink consumer: unwrap lineage-tagged batches (plan path);
-    bare dicts (pure-ingestion / legacy call sites) store unversioned."""
+    bare dicts (pure-ingestion / legacy call sites) store unversioned.
+    On durable feeds the consumer marks the batch's WAL sequence numbers
+    done in the ledger AFTER the (idempotent) store write returns — that
+    ordering is the exactly-once contract: a checkpoint can only cite a
+    watermark whose records are already in the column store."""
     def consume(frame) -> None:
         if isinstance(frame, _StoreBatch):
             storage.write(frame.batch, lineage=frame.lineage)
+            if ledger is not None and frame.wal_seqs:
+                ledger.mark_done(frame.wal_seqs)
         else:
             storage.write(frame)
+            if ledger is not None:
+                seqs = getattr(frame, "wal_seqs", None)
+                if seqs:
+                    ledger.mark_done(seqs)
     return consume
 
 _frame_rows = frame_rows      # shared with the holders' backlog accounting
@@ -121,12 +132,16 @@ class _StoreBatch:
     """An enriched batch plus the ref-version lineage it was computed
     under, en route to the STORE sink holder (tee sinks receive the bare
     dict).  The storage job records the lineage per stored chunk so the
-    repair subsystem (core/repair.py) can find stale rows later."""
-    __slots__ = ("batch", "lineage")
+    repair subsystem (core/repair.py) can find stale rows later.  On
+    durable feeds ``wal_seqs`` carries the intake-log sequence numbers of
+    the raw frames this batch was parsed from (core/durability.py)."""
+    __slots__ = ("batch", "lineage", "wal_seqs")
 
-    def __init__(self, batch: Dict, lineage: Optional[Dict[str, int]]):
+    def __init__(self, batch: Dict, lineage: Optional[Dict[str, int]],
+                 wal_seqs: Optional[Tuple[int, ...]] = None):
         self.batch = batch
         self.lineage = lineage
+        self.wal_seqs = wal_seqs
 
 
 @dataclasses.dataclass
@@ -214,6 +229,11 @@ class FeedStats:
     repair_lag_p95_s: float = 0.0
     repair_drain_s: float = 0.0
     repair: Optional[RepairStats] = None
+    # durable feeds (core/durability.py): time join() spent in the final
+    # coordinated checkpoint (WAL sync + storage flush + snapshot +
+    # truncate) — shutdown drain, not steady-state ingest, so benchmarks
+    # can exclude it the way they exclude repair_drain_s
+    durable_finish_s: float = 0.0
     # background segment compaction (core/compaction.py): space reclaimed
     # from superseded/deleted row versions while the feed ran
     compacted_rows: int = 0
@@ -287,6 +307,7 @@ class FeedHandle:
         self.storage_holder: Optional[ActivePartitionHolder] = None
         self.repair: Optional[RepairJob] = None
         self.compaction: Optional[CompactionJob] = None
+        self.durability: Optional[DurabilityRuntime] = None
         self.stats = FeedStats()
         self._t0 = 0.0
         self._lock = threading.Lock()               # lock-name: handle
@@ -351,12 +372,23 @@ class FeedHandle:
                 self.compaction.finish(timeout)
                 if self.compaction.error is not None:
                     raise self.compaction.error
+            if self.durability is not None and not self._finalized:
+                # final coordinated checkpoint: flush, snapshot the
+                # watermark (== last seq once every sink drained), and
+                # truncate the intake log so a clean restart replays
+                # nothing
+                t_fin = time.perf_counter()
+                self.durability.finish(timeout)
+                self.stats.durable_finish_s = (time.perf_counter()
+                                               - t_fin)
             self._finalize()
         finally:
             if self.repair is not None:
                 self.repair.stop()      # idempotent; error paths too
             if self.compaction is not None:
                 self.compaction.stop()
+            if self.durability is not None:
+                self.durability.stop()  # idempotent; error paths too
             self._deregister()
         return self.stats
 
@@ -548,8 +580,14 @@ class FeedHandle:
         if kind is dict:
             return records.concat_batches(group)
         merged: List = []
+        seqs: List[int] = []
         for g in group:
             merged.extend(g)
+            seqs.extend(getattr(g, "wal_seqs", ()))
+        if seqs:
+            # durable feed: the coalesced batch covers every merged
+            # frame's WAL records — the stamp union rides to the sink
+            return TrackedFrame(merged, tuple(seqs))
         return merged
 
     def _run_with_retry(self, runner: ComputingRunner, frame) -> Dict:
@@ -600,6 +638,9 @@ class FeedHandle:
                     # sink error promptly
                     continue
                 frame = self._coalesce(holder, frame)
+                # durable feed: lift the WAL stamp off the raw frame BEFORE
+                # the runner consumes it (parsing returns a plain dict)
+                wal_seqs = getattr(frame, "wal_seqs", None)
                 t0 = time.perf_counter()
                 out = self._run_with_retry(runner, frame)
                 holder.record_service(time.perf_counter() - t0)
@@ -622,8 +663,8 @@ class FeedHandle:
                         continue
                     try:
                         if si == self._store_sink_idx and \
-                                lineage is not None:
-                            sh.push(_StoreBatch(out, lineage))
+                                (lineage is not None or wal_seqs):
+                            sh.push(_StoreBatch(out, lineage, wal_seqs))
                         else:
                             sh.push(out)
                         delivered += 1
@@ -714,11 +755,14 @@ class FeedManager:
         self.feeds: Dict[str, FeedHandle] = {}  # guarded-by: _lock
 
     # --------------------------------------------------------------- submit
-    def submit(self, plan) -> FeedHandle:
+    def submit(self, plan, _resume=None) -> FeedHandle:
         """Execute a declarative ingestion plan (core/plan.py).  Accepts an
         ``IngestPlan`` or an uncompiled ``Pipeline`` (compiled here against
         this manager's refstore — all validation happens before any job
-        thread starts)."""
+        thread starts).  ``_resume`` is the private crash-restart path:
+        ``FeedManager.resume`` builds a ``recovery.RecoveryState`` and
+        re-submits the plan through here so both paths share the exact
+        same wiring."""
         if isinstance(plan, Pipeline):
             plan = plan.compile(self.refstore)
         if not isinstance(plan, IngestPlan):
@@ -734,7 +778,8 @@ class FeedManager:
             coalesce_rows=plan.coalesce_rows,
             coalesce_bytes=plan.coalesce_bytes,
             fault_hook=plan.fault_hook, elastic=plan.elastic)
-        handle = FeedHandle(cfg, self, plan.adapter, plan=plan)
+        adapter = _resume.adapter if _resume is not None else plan.adapter
+        handle = FeedHandle(cfg, self, adapter, plan=plan)
         # feedlint R1 fix: check-then-insert is one critical section, so
         # two racing submits of the same name cannot both win
         with self._lock:
@@ -742,8 +787,20 @@ class FeedManager:
                 raise KeyError(f"feed {plan.name} already active")
             self.feeds[plan.name] = handle
         handle._t0 = time.perf_counter()
-        self._start_new(cfg, handle, plan)
+        self._start_new(cfg, handle, plan, resume=_resume)
         return handle
+
+    def resume(self, plan, durable_dir: Optional[str] = None) -> FeedHandle:
+        """Crash-restart a durable feed (core/recovery.py): recover every
+        storage partition from its manifest, load the last checkpoint,
+        replay the intake log's tail through the normal pipeline (the
+        idempotent pk-index insert de-duplicates rows the crashed run
+        already stored), fast-forward the adapter to the last durable
+        offset, and hand back a live FeedHandle.  ``durable_dir``
+        overrides the plan's ``DurableSpec.dir`` (resume a directory the
+        plan object didn't originally point at)."""
+        from repro.core import recovery
+        return recovery.resume_feed(self, plan, durable_dir)
 
     # ------------------------------------------------- baseline entry point
     def start(self, cfg: FeedConfig, adapter: Adapter) -> FeedHandle:
@@ -780,7 +837,18 @@ class FeedManager:
         return handle
 
     def _start_new(self, cfg: FeedConfig, handle: FeedHandle,
-                   plan: IngestPlan) -> None:
+                   plan: IngestPlan, resume=None) -> None:
+        # durable plans: attach the WAL + ledger runtime — fresh feeds
+        # create/refuse-dirty the log directory, crash-restarts arrive
+        # with the already-recovered runtime in the RecoveryState
+        dspec = (plan.store_spec.durable
+                 if plan.store_spec is not None else None)
+        if resume is not None:
+            handle.durability = resume.runtime
+        elif dspec is not None:
+            handle.durability = DurabilityRuntime.create(dspec)
+        ledger = (handle.durability.ledger
+                  if handle.durability is not None else None)
         # one active holder per sink: the plan's multi-sink fan-out
         for i, spec in enumerate(plan.sinks):
             if spec.is_store:
@@ -791,7 +859,7 @@ class FeedManager:
                                             spec.store.zone_map_cols,
                                             spec.store.sort_key)
                 handle._store_sink_idx = i
-                consumer = _store_consumer(handle.storage)
+                consumer = _store_consumer(handle.storage, ledger)
             else:
                 consumer = spec.consumer
             sh = ActivePartitionHolder(
@@ -801,6 +869,16 @@ class FeedManager:
             handle.sink_holders.append(sh)
             handle._sink_names.append(spec.name)
         handle.storage_holder = handle.sink_holders[0]
+        if resume is not None and handle.storage is not None:
+            # crash-restart: rebuild every partition from its manifest
+            # BEFORE any worker can write — the recovered pk index is
+            # what de-duplicates the replayed WAL tail
+            handle.storage.recover()
+            if resume.reset_lineage:
+                # checkpointed ref fingerprints did not match the current
+                # reference tables: drop lineage so repair re-scans
+                # EVERYTHING rather than trusting stale versions
+                handle.storage.reset_lineage()
 
         # stage groups: the plan's independently-scalable chain segments
         # (pre-stage-group IngestPlans lower to one group over plan.udf)
@@ -823,15 +901,24 @@ class FeedManager:
         handle.holders = handle.stage_groups[0].holders
         for g, rt in zip(groups, handle.stage_groups):
             n = g.partitions or cfg.num_partitions
+            if resume is not None:
+                # resume at the learned scale: the checkpoint persisted
+                # per-group partition counts (ElasticityController state)
+                n = resume.partitions.get(rt.name, n)
             if rt.elastic is not None:
                 # elastic groups start inside their declared bounds
                 n = min(max(n, rt.elastic.min_partitions),
                         rt.elastic.max_partitions)
+            else:
+                n = max(1, n)
             with handle._lock:
                 for _ in range(n):
                     handle._add_partition_locked(rt)
+        wal = (handle.durability.wal
+               if handle.durability is not None else None)
         handle.intake = IntakeJob(handle.adapter, handle.holders,
-                                  lock=handle._lock)
+                                  lock=handle._lock, wal=wal,
+                                  ledger=ledger)
         handle.intake.start()
         if any(rt.elastic is not None for rt in handle.stage_groups):
             handle.controller = ElasticityController(
@@ -843,6 +930,10 @@ class FeedManager:
             # (compile() guaranteed an enrich stage and a single group)
             handle.repair = RepairJob(plan, handle.storage, self.refstore,
                                       self.predeploy, handle=handle)
+            if resume is not None and resume.repair_events:
+                # checkpointed ref-event log (fingerprints matched):
+                # restore BEFORE start so the first scheduler pass sees it
+                handle.repair.restore_events(resume.repair_events)
             handle.repair.start()
         if store_spec is not None and store_spec.compact is not None:
             # background space reclaim: budgeted, yields to ingestion the
@@ -851,6 +942,13 @@ class FeedManager:
                 handle.storage, store_spec.compact, cfg.batch_size,
                 handle=handle, name=cfg.name)
             handle.compaction.start()
+        if handle.durability is not None:
+            # coordinated checkpoints: start LAST so every job the
+            # checkpoint snapshots (storage, repair, stage groups) exists
+            ref_tables = (plan.udf.ref_tables
+                          if handle.repair is not None and
+                          plan.udf is not None else ())
+            handle.durability.start(handle, self.refstore, ref_tables)
 
     # ------------------------------------------------- coupled baselines
     def _start_coupled(self, cfg: FeedConfig, handle: FeedHandle,

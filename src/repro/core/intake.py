@@ -6,6 +6,17 @@ computing batch of JSON-line byte records).  The intake job never parses in
 the new framework — parsing happens inside the (parallel) computing jobs,
 which is exactly the difference the paper measures against "current feeds"
 where a single intake node parses everything (Fig 24's bottleneck).
+
+Durable feeds (core/durability.py) add a resumable-offset contract to the
+adapter: ``offset`` is the position from which a restarted feed can
+re-obtain everything after the frames already yielded, ``resume(offset)``
+fast-forwards a fresh adapter to that position, and adapters that cannot
+replay lost input (a live socket) declare ``resumable = False`` /
+raise ``NotResumableError`` so plan compilation rejects ``durable=`` on
+them up front.  When a WAL is attached, ``IntakeJob`` appends every live
+frame to it *before* the first push (write-ahead ack) and stamps the
+frame with its log sequence number, which rides to the store sink and
+drives the checkpoint watermark.
 """
 
 from __future__ import annotations
@@ -13,20 +24,55 @@ from __future__ import annotations
 import socket
 import threading
 import time
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Tuple
 
 from repro.core.partition_holder import PartitionHolder
 from repro.core.records import SyntheticTweets, batch_rows
 
 
+class NotResumableError(RuntimeError):
+    """The adapter cannot re-obtain past input from an offset (so a
+    durable plan over it cannot guarantee zero loss across a crash)."""
+
+
+class TrackedFrame(list):
+    """A raw frame carrying the WAL sequence number(s) of the intake-log
+    record(s) it covers.  A plain ``list`` subclass so every downstream
+    consumer (parser, coalescing, ``len``) treats it as the frame it is;
+    the ``wal_seqs`` stamp rides through the worker to the store sink,
+    where completion marks the ledger.  Replayed frames are built as
+    TrackedFrames by recovery — the intake job logs only plain frames,
+    so a replay is never re-appended to the WAL."""
+
+    __slots__ = ("wal_seqs",)
+
+    def __init__(self, lines, wal_seqs: Tuple[int, ...]):
+        super().__init__(lines)
+        self.wal_seqs = tuple(wal_seqs)
+
+
 class Adapter:
-    """Iterator of frames (list[bytes]); ``stop()`` requests early end."""
+    """Iterator of frames (list[bytes]); ``stop()`` requests early end.
+
+    Resumable-offset contract: ``frames()`` keeps ``self.offset`` equal
+    to the resume position *after* the most recently yielded frame (the
+    unit is adapter-defined: bytes for files, records for the synthetic
+    stream).  ``resume(offset)`` positions a fresh instance so its
+    ``frames()`` yields exactly the post-``offset`` remainder; the base
+    class declines (``resumable = False``)."""
+
+    resumable = False
 
     def __init__(self):
         self._stop = threading.Event()
+        self.offset = 0   # resume position after the last yielded frame
 
     def stop(self) -> None:
         self._stop.set()
+
+    def resume(self, offset: int) -> None:
+        raise NotResumableError(
+            f"{type(self).__name__} cannot resume from an offset")
 
     def frames(self) -> Iterator[List[bytes]]:
         raise NotImplementedError
@@ -34,18 +80,54 @@ class Adapter:
 
 class SyntheticAdapter(Adapter):
     """Deterministic tweet stream: ``total`` records in ``frame_size``
-    frames, optionally rate-limited (records/second)."""
+    frames, optionally rate-limited (records/second).  Offset = records
+    emitted; ``resume(n)`` regenerates and discards the first ``n``
+    records (the stream is seed-deterministic, so the remainder is
+    bitwise the one a crashed feed would have produced)."""
+
+    resumable = True
 
     def __init__(self, total: int, frame_size: int, seed: int = 0,
                  rate: Optional[float] = None):
         super().__init__()
         self.total, self.frame_size, self.rate = total, frame_size, rate
         self.source = SyntheticTweets(seed=seed)
+        self._resume_at = 0
+
+    def resume(self, offset: int) -> None:
+        offset = int(offset)
+        if not 0 <= offset <= self.total:
+            raise ValueError(
+                f"resume offset {offset} outside [0, {self.total}]")
+        self._resume_at = offset
+        self.offset = offset
 
     def frames(self) -> Iterator[List[bytes]]:
+        # Fast-forward by replaying EXACTLY the chunked draws the
+        # original run made: raw_lines interleaves vectorized rng draws
+        # sized by the call with per-record draws, so any other chunking
+        # desyncs the stream.  A mid-frame offset lands inside one
+        # original frame_size chunk — regenerate that chunk whole and
+        # emit its unseen suffix as a short first frame.
+        drawn = 0
+        first: List[bytes] = []
+        while drawn < self._resume_at:
+            n = min(self.frame_size, self.total - drawn)
+            chunk = self.source.raw_lines(n)
+            rest = self._resume_at - drawn
+            if rest < n:
+                first = chunk[rest:]
+            drawn += n
+
+        def gen() -> Iterator[List[bytes]]:
+            if first:
+                yield first
+            yield from self.source.batches(self.total - drawn,
+                                           self.frame_size)
+
         t0 = time.perf_counter()
         sent = 0
-        for frame in self.source.batches(self.total, self.frame_size):
+        for frame in gen():
             if self._stop.is_set():
                 return
             if self.rate:
@@ -53,37 +135,67 @@ class SyntheticAdapter(Adapter):
                 delay = target - time.perf_counter()
                 if delay > 0:
                     time.sleep(delay)
-            yield frame
             sent += len(frame)
+            self.offset = self._resume_at + sent
+            yield frame
 
 
 class FileAdapter(Adapter):
-    """JSON-lines file -> frames."""
+    """JSON-lines file -> frames.  Offset = byte position after the last
+    line of the last yielded frame; ``resume(offset)`` seeks."""
+
+    resumable = True
 
     def __init__(self, path: str, frame_size: int):
         super().__init__()
         self.path, self.frame_size = path, frame_size
+        self._resume_at = 0
+
+    def resume(self, offset: int) -> None:
+        offset = int(offset)
+        if offset < 0:
+            raise ValueError(f"resume offset {offset} < 0")
+        self._resume_at = offset
+        self.offset = offset
 
     def frames(self) -> Iterator[List[bytes]]:
         buf: List[bytes] = []
+        # manual readline loop (not ``for line in f``): the read-ahead
+        # iterator would desync f.tell() from the consumed position,
+        # and the offset contract needs the exact byte after the frame
         with open(self.path, "rb") as f:
-            for line in f:
+            if self._resume_at:
+                f.seek(self._resume_at)
+            self.offset = f.tell()
+            while True:
+                line = f.readline()
+                if not line:
+                    break
                 if self._stop.is_set():
                     return
-                line = line.strip()
-                if not line:
-                    continue
-                buf.append(line)
+                stripped = line.strip()
+                if stripped:
+                    buf.append(stripped)
                 if len(buf) >= self.frame_size:
+                    self.offset = f.tell()
                     yield buf
                     buf = []
-        if buf:
-            yield buf
+            if buf:
+                self.offset = f.tell()
+                yield buf
 
 
 class SocketAdapter(Adapter):
     """The paper's socket feed (Fig 4): newline-delimited JSON over TCP.
-    Listens on (host, port); one connection at a time; EOF ends the feed."""
+    Listens on (host, port); one connection at a time; EOF ends the feed.
+
+    Explicitly not resumable: bytes a crashed feed failed to log are
+    gone from a live socket, so ``durable=`` on this adapter is a
+    compile-time ``PlanError`` (the upstream must re-send, e.g. via a
+    file spool or a seekable broker) rather than a restart-time
+    surprise."""
+
+    resumable = False
 
     def __init__(self, host: str, port: int, frame_size: int):
         super().__init__()
@@ -94,6 +206,12 @@ class SocketAdapter(Adapter):
     @property
     def address(self):
         return self._srv.getsockname()
+
+    def resume(self, offset: int) -> None:
+        raise NotResumableError(
+            "SocketAdapter cannot replay lost socket input from an "
+            "offset; spool the stream to a file (FileAdapter) for "
+            "durable ingestion")
 
     def frames(self) -> Iterator[List[bytes]]:
         try:
@@ -136,10 +254,17 @@ class IntakeJob(threading.Thread):
     the lock *before* closing the holders — ``scale_up`` checks it under
     the same lock, so a late scale-up can never add a holder that would
     miss its StopRecord.
+
+    With a WAL attached (durable plans), every *live* frame is appended
+    to the log — together with the adapter's post-frame resume offset —
+    before the first push attempt, and the frame is stamped with the
+    record's sequence number.  Replayed frames (already ``TrackedFrame``)
+    pass through unlogged.
     """
 
     def __init__(self, adapter: Adapter, holders: List[PartitionHolder],
-                 lock: Optional[threading.Lock] = None):
+                 lock: Optional[threading.Lock] = None,
+                 wal=None, ledger=None):
         super().__init__(name="intake-job", daemon=True)
         self.adapter = adapter
         self.holders = holders
@@ -147,6 +272,8 @@ class IntakeJob(threading.Thread):
         self.records_in = 0
         self.closing = False     # guarded-by: _lock
         self.error: Optional[BaseException] = None
+        self._wal = wal
+        self._ledger = ledger
         # the decoupled path passes the feed-handle lock in, so
         # scale_up's closing check and the drain flip serialize on
         # the SAME lock; the coupled baseline gets a private one
@@ -156,6 +283,13 @@ class IntakeJob(threading.Thread):
         try:
             i = 0
             for frame in self.adapter.frames():
+                if self._wal is not None and not isinstance(
+                        frame, (TrackedFrame, dict)):
+                    # write-ahead ack: log before any holder sees it
+                    off = getattr(self.adapter, "offset", 0)
+                    seq = self._wal.append_frame(off, frame)
+                    self._ledger.note_logged(seq, off)
+                    frame = TrackedFrame(frame, (seq,))
                 while True:
                     # snapshot the live holder list each frame (elasticity)
                     hs = list(self.holders)

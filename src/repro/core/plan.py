@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import records
 from repro.core.compaction import CompactionSpec
+from repro.core.durability import DurableSpec
 from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
@@ -72,7 +73,14 @@ class StoreSpec:
     numeric column; () disables); ``sort_key`` clusters each flushed
     segment by that column.  ``compact`` attaches a budgeted background
     ``CompactionJob`` (core/compaction.py) reclaiming superseded/deleted
-    row versions as upserts and repair churn the store."""
+    row versions as upserts and repair churn the store.
+
+    ``durable=DurableSpec(...)`` makes the whole FEED crash-restartable
+    (core/durability.py): a write-ahead intake log, coordinated
+    checkpoints, and ``FeedManager.resume`` replay with storage-side
+    dedup — exactly-once ingestion across a kill.  Requires a resumable
+    adapter (compile-checked); ``spill_dir`` defaults to a ``store/``
+    subdirectory of the durable dir when unset."""
     partitions: int = 0            # 0 -> plan.num_partitions
     spill_dir: Optional[str] = None
     upsert: bool = False
@@ -81,6 +89,7 @@ class StoreSpec:
     zone_map_cols: Optional[Tuple[str, ...]] = None
     sort_key: Optional[str] = None
     compact: Optional[CompactionSpec] = None
+    durable: Optional[DurableSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +155,18 @@ def _coerce_compact(value) -> Optional[CompactionSpec]:
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid compact spec {value!r}: {e}") from e
     raise PlanError("store(compact=...) takes a CompactionSpec or dict, "
+                    f"got {type(value).__name__}")
+
+
+def _coerce_durable(value) -> Optional[DurableSpec]:
+    if value is None or isinstance(value, DurableSpec):
+        return value
+    if isinstance(value, dict):
+        try:
+            return DurableSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid durable spec {value!r}: {e}") from e
+    raise PlanError("store(durable=...) takes a DurableSpec or dict, "
                     f"got {type(value).__name__}")
 
 
@@ -270,7 +291,8 @@ class Pipeline:
     def store(self, partitions: int = 0, spill_dir: Optional[str] = None,
               upsert: bool = False, segment_rows: int = 100_000,
               refresh=None, zone_map_cols: Optional[Tuple[str, ...]] = None,
-              sort_key: Optional[str] = None, compact=None) -> "Pipeline":
+              sort_key: Optional[str] = None, compact=None,
+              durable=None) -> "Pipeline":
         """The column-store sink; at runtime ``FeedHandle.query()`` (or
         ``handle.storage.query()``) opens the analytical query subsystem
         over it (core/query.py).  ``refresh=RepairSpec(...)`` (or a kwargs
@@ -279,12 +301,20 @@ class Pipeline:
         lineage went stale (see core/repair.py).  ``zone_map_cols``/
         ``sort_key`` are the read-side layout knobs and ``compact=
         CompactionSpec(...)`` the background space-reclaim policy — see
-        ``StoreSpec``."""
+        ``StoreSpec``.  ``durable=DurableSpec(...)`` (or a kwargs dict)
+        makes the feed crash-restartable via a write-ahead intake log +
+        checkpoints (core/durability.py; resume with
+        ``FeedManager.resume``)."""
+        dspec = _coerce_durable(durable)
+        if dspec is not None and spill_dir is None:
+            # a durable feed without a durable store is pointless — the
+            # replay dedup needs the recovered pk index
+            spill_dir = dspec.store_dir
         self._stages.append(("store", StoreSpec(
             partitions, spill_dir, upsert, segment_rows,
             _coerce_repair(refresh),
             tuple(zone_map_cols) if zone_map_cols is not None else None,
-            sort_key, _coerce_compact(compact))))
+            sort_key, _coerce_compact(compact), dspec)))
         return self
 
     # -------------------------------------------------------------- compile
@@ -321,6 +351,7 @@ class Pipeline:
                     f"{g.elastic.max_partitions}]")
         self._check_repair(fused, sinks, project_cols, groups)
         self._check_store(sinks, delivered)
+        self._check_durable(sinks, groups)
         return IngestPlan(
             name=self._name, adapter=self._adapter, udf=fused,
             stage_names=tuple(u.name for u in (
@@ -418,6 +449,33 @@ class Pipeline:
             raise PlanError(
                 f"store(sort_key={spec.sort_key!r}) is not a stored "
                 f"column; available: {sorted(delivered)}")
+
+    def _check_durable(self, sinks, groups) -> None:
+        """Durable-feed preconditions, rejected at compile time — not as
+        a restart-time surprise when the crashed data is already gone."""
+        spec = next((s.store.durable for s in sinks if s.is_store), None)
+        if spec is None:
+            return
+        ad = self._adapter
+        if not getattr(ad, "resumable", False):
+            raise PlanError(
+                f"store(durable=...) requires a resumable adapter, but "
+                f"{type(ad).__name__} declares resumable=False — input "
+                "lost in a crash could never be replayed (SocketAdapter: "
+                "spool the stream to a file and use FileAdapter)")
+        if len(groups) > 1:
+            raise PlanError(
+                "store(durable=...) requires a single stage group: the "
+                "WAL sequence stamp rides the batch to the store sink, "
+                "and per-stage splits drop it at the intermediate "
+                "holder hand-off (fuse the chain, or use feed-wide "
+                "options(elastic=...) which keeps one group)")
+        if self._parse["model"] == "per_record":
+            raise PlanError(
+                "store(durable=...) is incompatible with model="
+                "'per_record': the per-record path re-frames batches, "
+                "losing the WAL sequence stamp the checkpoint watermark "
+                "is driven by")
 
     # -------------------------------------------------------------- helpers
     def _split_stages(self):

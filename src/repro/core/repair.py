@@ -248,6 +248,47 @@ class RepairJob(threading.Thread):
         self._maybe_stale = True
         self._wake.set()
 
+    # ------------------------------------------------ durability (PR 7)
+    SNAPSHOT_MAX_KEYS = 8192      # per-event key cap in a checkpoint
+
+    def snapshot_events(self) -> Dict[str, List]:
+        """JSON-serializable image of the per-table ref-event log for a
+        coordinated checkpoint (core/durability.py).  Times are stored as
+        *ages* (seconds before the snapshot) because ``time.monotonic``
+        does not survive a process restart; oversized key sets degrade to
+        ``None`` (coarse version matching — never misses, just probes
+        less precisely)."""
+        now = time.monotonic()
+        with self._events_lock:
+            return {
+                t: [[int(e.version), max(0.0, now - e.t),
+                     None if e.keys is None or
+                     e.keys.size > self.SNAPSHOT_MAX_KEYS
+                     else [int(k) for k in e.keys]]
+                    for e in log]
+                for t, log in self._events.items()}
+
+    def restore_events(self, events: Dict[str, List]) -> None:
+        """Rebuild the event log from a checkpoint image (crash-restart).
+        Only called when the checkpointed ref fingerprints matched the
+        current tables — otherwise recovery resets lineage and repair
+        re-scans everything.  Call before ``start()``."""
+        now = time.monotonic()
+        with self._events_lock:
+            for t, log in events.items():
+                if t not in self._events:
+                    continue
+                self._events[t] = [
+                    _RefEvent(int(v), now - float(age),
+                              None if keys is None
+                              else np.asarray(keys, np.int64))
+                    for v, age, keys in log]
+            pending = [e.t for log in self._events.values() for e in log]
+            if pending:
+                self._oldest_pending = min(pending)
+        self._maybe_stale = True
+        self._wake.set()
+
     def _dirty_keys(self, table: str,
                     have_version: int) -> Optional[np.ndarray]:
         """Union of keys changed since ``have_version``; None = unknown

@@ -61,6 +61,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import nputil
+from repro.core.durability import fsync_dir
 
 Lineage = Dict[str, int]          # ref table name -> version enriched under
 
@@ -393,6 +394,8 @@ class StoragePartition:
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:  # file handle: savez won't append ".npz"
             np.savez_compressed(f, **seg)
+            f.flush()
+            os.fsync(f.fileno())    # durable BEFORE the manifest cites it
         os.replace(tmp, path)       # atomic commit
         self._seg_files.append(fname)
         self._seg_rows.append(n)
@@ -423,7 +426,12 @@ class StoragePartition:
                         for zm in self._seg_zmaps]}
         with open(man + ".tmp", "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())  # a crash must never leave a torn/empty
+        if os.path.exists(man):   # manifest; the previous one survives as
+            os.replace(man, man + ".bak")  # .bak for recover()'s fallback
         os.replace(man + ".tmp", man)
+        fsync_dir(os.path.dirname(man))
         self._manifest_dirty = False
         self._manifest_last_s = time.monotonic()
 
@@ -446,6 +454,47 @@ class StoragePartition:
                 if self._manifest_dirty:
                     self._write_manifest_locked()
 
+    def _load_manifest_locked(self) -> Optional[Dict]:
+        # requires-lock: _lock
+        # feedlint: allow[blocking-under-lock] cold-start manifest read
+        """Load MANIFEST.json, falling back to the ``.bak`` predecessor
+        when the current file is torn/empty (a pre-fsync-era crash, or a
+        filesystem that reordered the rename).  Falling back one
+        manifest is sound: every writer commits the new manifest BEFORE
+        unlinking any segment file it dropped (see compact_segment), so
+        a .bak's segment list is still fully on disk.  No manifest at
+        all = fresh partition; an unreadable manifest with no readable
+        .bak raises — silently recovering empty would drop data."""
+        man = self._seg_path("MANIFEST.json")
+        if not (os.path.exists(man) or os.path.exists(man + ".bak")):
+            return None
+        err: Optional[Exception] = None
+        for path in (man, man + ".bak"):
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+                if isinstance(doc, dict) and "segments" in doc:
+                    return doc
+                err = err or ValueError(f"malformed manifest {path}")
+            except (OSError, json.JSONDecodeError) as e:
+                err = err or e
+        raise RuntimeError(
+            f"partition {self.pid}: MANIFEST.json unreadable and no "
+            f"usable .bak fallback ({err})")
+
+    def reset_lineage(self) -> None:
+        """Recovery degrade path (core/recovery.py): when a restarted
+        process's rebuilt ref tables don't fingerprint-match the
+        checkpoint, recovered lineage versions are meaningless — reset
+        every unit to ``{}`` (always-stale to the repair scheduler) so
+        the feed re-scans everything rather than ever treating a row as
+        silently current."""
+        with self._lock:
+            self._seg_lineage = [{} for _ in self._seg_files]
+            self._chunk_lineage = [None] * len(self._chunks)
+            if self.spill_dir and self._seg_files:
+                self._write_manifest_locked()
+
     def recover(self) -> "StoragePartition":
         """Crash recovery: reload the manifested (durable) segments —
         counts, pk index, per-segment lineage, and zone maps; unflushed
@@ -466,11 +515,9 @@ class StoragePartition:
             self._rows_total = 0
             self._seg_files, self._seg_rows = [], []
             self._seg_lineage, self._seg_zmaps, self._seg_dead = [], [], []
-            man = self._seg_path("MANIFEST.json")
-            if not os.path.exists(man):
+            manifest = self._load_manifest_locked()
+            if manifest is None:
                 return self
-            with open(man) as f:
-                manifest = json.load(f)
             nseg = int(manifest["segments"])
             files = manifest.get("seg_files") or \
                 [f"seg{s:06d}.npz" for s in range(nseg)]
@@ -601,6 +648,8 @@ class StoragePartition:
             tmp = new_path + ".tmp"
             with open(tmp, "wb") as f:
                 np.savez_compressed(f, **kept)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, new_path)
             # renumber: kept rows compact to [lo, lo+m); the suffix of the
             # position space shifts down.  Every index entry in the span
@@ -967,3 +1016,9 @@ class StorageJob:
         for p in self.partitions:
             p.recover()
         return self
+
+    def reset_lineage(self) -> None:
+        """All units in every partition -> always-stale (see
+        StoragePartition.reset_lineage)."""
+        for p in self.partitions:
+            p.reset_lineage()

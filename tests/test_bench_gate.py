@@ -92,6 +92,8 @@ def test_every_threshold_metric_is_emitted_by_its_driver():
         "fig_query": (REPO / "benchmarks" / "fig_query.py").read_text(),
         "fig25": (REPO / "benchmarks" /
                   "fig25_udf_enrichment.py").read_text(),
+        "fig_recovery": (REPO / "benchmarks" /
+                         "fig_recovery.py").read_text(),
     }
     for profile in THRESHOLDS:
         for fig, rows in THRESHOLDS[profile].items():

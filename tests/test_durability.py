@@ -1,0 +1,521 @@
+"""Durable feeds (core/durability.py + core/recovery.py): WAL framing
+and torn-tail truncation, checkpoint atomicity and truncation, the
+ledger watermark, compile-time durable-plan validation, and in-process
+crash-image resume with exactly-once verification.
+
+Crash images are taken by copying the live durable directory (in the
+causal order a crash would preserve: checkpoints before WAL data,
+manifests before segments) while the feed is running — a mid-write copy
+IS a crash image, and the CRC/atomic-rename machinery must absorb it.
+
+Deliberately hypothesis-free: runs in the minimal-install CI job.
+"""
+
+import json
+import os
+import random
+import shutil
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DurableSpec, FeedManager, FileAdapter,
+                        NotResumableError, PlanError, RefStore,
+                        RepairSpec, SocketAdapter, StorageJob,
+                        SyntheticAdapter, pipeline)
+from repro.core.durability import (CheckpointStore, DurabilityRuntime,
+                                   FrameLedger, IntakeLog)
+from repro.core.enrich import queries as Q
+from repro.core.repair import RepairJob
+
+pytestmark = pytest.mark.timeout(300)
+
+
+def make_manager(scale=0.002):
+    store = RefStore()
+    Q.make_reference_tables(store, scale=scale, seed=7)
+    return FeedManager(store)
+
+
+def durable_plan(mgr, dur_dir, total=0, batch=50, name="dp", seed=3,
+                 rate=None, refresh=None, **dur_kw):
+    p = (pipeline(SyntheticAdapter(total=total, frame_size=batch,
+                                   seed=seed, rate=rate), name)
+         .parse(batch_size=batch)
+         .options(num_partitions=2, holder_capacity=16)
+         .enrich(Q.Q1)
+         .store(durable=DurableSpec(dir=str(dur_dir), **dur_kw),
+                refresh=refresh))
+    return p.compile(mgr.refstore)
+
+
+def stored_ids(storage):
+    """Every live pk across all partitions, duplicates included."""
+    out = []
+    for part in storage.partitions:
+        snap = part.snapshot_view()
+        try:
+            for u in snap.units:
+                ids = np.asarray(u.read(("id",))["id"])
+                out.append(ids[snap.live_mask(ids, u.base)])
+        finally:
+            snap.release()
+    return (np.concatenate(out) if out
+            else np.array([], dtype=np.int64))
+
+
+def stored_rows(storage):
+    """{pk: row} with latest-occurrence-wins (global row order)."""
+    rows = {}
+    for c in storage.scan():
+        for i in range(c["id"].shape[0]):
+            rows[int(c["id"][i])] = {k: c[k][i] for k in c}
+    return rows
+
+
+def assert_store_current(mgr, storage):
+    """Every stored row's safety_level equals a from-scratch enrichment
+    under the CURRENT reference snapshot."""
+    snap = mgr.refstore["safety_levels"].snapshot()
+    a = snap.arrays
+    table = {int(k): int(v) for k, v in
+             zip(a["key"][:snap.size], a["safety_level"][:snap.size])}
+    rows = stored_rows(storage)
+    assert rows, "empty store"
+    for pk, row in rows.items():
+        assert int(row["safety_level"]) == table.get(int(row["country"]),
+                                                     -1), pk
+
+
+def assert_exactly_once(storage, total):
+    got = stored_ids(storage)
+    assert len(got) == len(set(got.tolist())), "duplicate rows stored"
+    assert set(got.tolist()) == set(range(total)), (
+        f"rows lost: {len(set(range(total)) - set(got.tolist()))}")
+
+
+# ---------------------------------------------------------------------------
+# IntakeLog framing
+# ---------------------------------------------------------------------------
+
+def frames_of(n, k=5, tag=b"r"):
+    return [[b"%s-%d-%d" % (tag, i, j) for j in range(k)]
+            for i in range(n)]
+
+
+def test_wal_round_trip_and_reopen(tmp_path):
+    wal = IntakeLog(str(tmp_path), fsync="never")
+    for i, fr in enumerate(frames_of(7)):
+        assert wal.append_frame((i + 1) * 10, fr) == i + 1
+    assert wal.tail() == (7, 70)
+    wal.close()
+    re = IntakeLog(str(tmp_path), fsync="never")
+    assert re.tail() == (7, 70)
+    recs = list(re.replay(0))
+    assert [r.seq for r in recs] == list(range(1, 8))
+    assert [r.offset for r in recs] == [10 * i for i in range(1, 8)]
+    assert recs[3].lines == frames_of(7)[3]
+    # replay from a mid watermark
+    assert [r.seq for r in re.replay(5)] == [6, 7]
+    # appends continue the sequence
+    assert re.append_frame(80, [b"x"]) == 8
+    re.close()
+
+
+def test_wal_truncates_torn_tail_and_continues(tmp_path):
+    wal = IntakeLog(str(tmp_path), fsync="never")
+    for i, fr in enumerate(frames_of(4)):
+        wal.append_frame(i + 1, fr)
+    wal.close()
+    (seg,) = [n for n in os.listdir(str(tmp_path)) if n.endswith(".log")]
+    path = os.path.join(str(tmp_path), seg)
+    with open(path, "r+b") as f:          # tear the last record mid-write
+        f.truncate(os.path.getsize(path) - 3)
+    re = IntakeLog(str(tmp_path), fsync="never")
+    assert re.tail() == (3, 3)            # torn record 4 dropped
+    assert [r.seq for r in re.replay(0)] == [1, 2, 3]
+    assert re.append_frame(99, [b"new"]) == 4   # prefix continues
+    assert [r.seq for r in re.replay(0)] == [1, 2, 3, 4]
+    re.close()
+
+
+def test_wal_replay_stops_at_corrupt_middle_record(tmp_path):
+    """Prefix contract: a flipped byte mid-log ends the readable prefix
+    — later records are NOT resurrected past the corruption."""
+    wal = IntakeLog(str(tmp_path), fsync="never")
+    sizes = []
+    for i, fr in enumerate(frames_of(5)):
+        wal.append_frame(i + 1, fr)
+        sizes.append(os.path.getsize(
+            os.path.join(str(tmp_path), os.listdir(str(tmp_path))[0])))
+    wal.close()
+    (seg,) = os.listdir(str(tmp_path))
+    path = os.path.join(str(tmp_path), seg)
+    with open(path, "r+b") as f:          # corrupt record 3's payload
+        f.seek(sizes[1] + 20)
+        f.write(b"\xff")
+    re = IntakeLog(str(tmp_path), fsync="never")
+    assert [r.seq for r in re.replay(0)] == [1, 2]
+    re.close()
+
+
+def test_wal_rotation_and_checkpoint_truncation(tmp_path):
+    wal = IntakeLog(str(tmp_path), fsync="never", segment_bytes=1 << 12)
+    big = [b"x" * 200 for _ in range(8)]
+    for i in range(40):
+        wal.append_frame(i + 1, big)
+    segs = sorted(n for n in os.listdir(str(tmp_path))
+                  if n.endswith(".log"))
+    assert len(segs) > 3                  # rotated
+    # truncate to a watermark inside the log: only sealed segments whose
+    # every record <= W are unlinked, never the active one
+    assert wal.truncate(20) >= 1
+    left = sorted(n for n in os.listdir(str(tmp_path))
+                  if n.endswith(".log"))
+    assert left and left[-1] == segs[-1]
+    recs = [r.seq for r in wal.replay(20)]
+    assert recs[-1] == 40 and recs == list(range(recs[0], 41))
+    assert min(recs) <= 21                # nothing past W is lost
+    assert wal.tail()[0] == 40
+    wal.close()
+
+
+def test_checkpoint_store_atomic_with_bak_fallback(tmp_path):
+    ck = CheckpointStore(str(tmp_path))
+    assert ck.load() is None
+    ck.save({"watermark": 3, "last_seq": 3, "last_offset": 30})
+    ck.save({"watermark": 7, "last_seq": 9, "last_offset": 90})
+    assert ck.load()["watermark"] == 7
+    with open(ck.path, "w") as f:         # torn current checkpoint
+        f.write('{"waterm')
+    assert ck.load()["watermark"] == 3    # falls back one checkpoint
+    os.unlink(ck.path)
+    assert ck.load()["watermark"] == 3    # .bak alone still recovers
+
+
+def test_frame_ledger_out_of_order_watermark():
+    led = FrameLedger()
+    for s in range(1, 6):
+        led.note_logged(s, s * 10)
+    assert led.watermark() == 0 and led.backlog() == 5
+    led.mark_done([2, 3])
+    assert led.watermark() == 0
+    led.mark_done([1])
+    assert led.watermark() == 3
+    led.mark_done([5])
+    assert led.watermark() == 3
+    led.mark_done([4])
+    assert led.watermark() == 5 and led.backlog() == 0
+    assert led.tail() == (5, 50)
+
+
+def test_ledger_resume_initialization():
+    """On resume the ledger starts at the checkpoint watermark with the
+    WAL tail pending — a checkpoint can never claim unreplayed
+    progress."""
+    led = FrameLedger(watermark=10, tail_seq=14, tail_offset=700)
+    assert led.watermark() == 10 and led.backlog() == 4
+    led.mark_done([11, 12, 13, 14])
+    assert led.watermark() == 14
+
+
+# ---------------------------------------------------------------------------
+# spec + compile-time validation
+# ---------------------------------------------------------------------------
+
+def test_durable_spec_validation(tmp_path):
+    with pytest.raises(ValueError, match="fsync"):
+        DurableSpec(dir=str(tmp_path), fsync="sometimes")
+    with pytest.raises(ValueError, match="dir"):
+        DurableSpec(dir="")
+    with pytest.raises(ValueError, match="checkpoint_interval_s"):
+        DurableSpec(dir=str(tmp_path), checkpoint_interval_s=0)
+    s = DurableSpec(dir=str(tmp_path))
+    assert s.wal_dir.endswith("intake") and s.store_dir.endswith("store")
+
+
+def test_plan_rejects_durable_on_socket_adapter(tmp_path):
+    ad = SocketAdapter("127.0.0.1", 0, frame_size=10)
+    try:
+        p = (pipeline(ad, "sock").parse(batch_size=10)
+             .store(durable=DurableSpec(dir=str(tmp_path))))
+        with pytest.raises(PlanError, match="resumable"):
+            p.compile(RefStore())
+        with pytest.raises(NotResumableError):
+            ad.resume(0)
+    finally:
+        ad.stop()
+        ad._srv.close()
+
+
+def test_plan_rejects_durable_on_multi_group_and_per_record(tmp_path):
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "mg")
+         .parse(batch_size=50)
+         .enrich(Q.Q1)
+         .enrich(Q.Q2, partitions=2)          # opens a second stage group
+         .store(durable=DurableSpec(dir=str(tmp_path))))
+    with pytest.raises(PlanError, match="stage group"):
+        p.compile(mgr.refstore)
+    p2 = (pipeline(SyntheticAdapter(total=0, frame_size=50), "pr")
+          .parse(batch_size=50, model="per_record")
+          .enrich(Q.Q1)
+          .store(durable=DurableSpec(dir=str(tmp_path))))
+    with pytest.raises(PlanError, match="per_record"):
+        p2.compile(mgr.refstore)
+
+
+def test_store_durable_coercion_and_spill_default(tmp_path):
+    mgr = make_manager()
+    p = (pipeline(SyntheticAdapter(total=0, frame_size=50), "dc")
+         .parse(batch_size=50).enrich(Q.Q1)
+         .store(durable={"dir": str(tmp_path)}))      # dict coerces
+    plan = p.compile(mgr.refstore)
+    spec = plan.store_spec
+    assert spec.durable.dir == str(tmp_path)
+    # a durable feed without a durable store would be pointless: the
+    # replay dedup needs the recovered pk index
+    assert spec.spill_dir == spec.durable.store_dir
+    with pytest.raises(PlanError, match="durable"):
+        (pipeline(SyntheticAdapter(total=0, frame_size=50), "dx")
+         .parse(batch_size=50).store(durable=42))
+
+
+def test_create_refuses_dirty_durable_dir(tmp_path):
+    spec = DurableSpec(dir=str(tmp_path))
+    rt = DurabilityRuntime.create(spec)
+    rt.wal.append_frame(1, [b"x"])
+    rt.wal.close()
+    with pytest.raises(RuntimeError, match="resume"):
+        DurabilityRuntime.create(spec)
+
+
+def test_file_adapter_resumes_mid_file(tmp_path):
+    path = str(tmp_path / "in.jsonl")
+    lines = [b'{"n": %d}' % i for i in range(10)]
+    with open(path, "wb") as f:
+        f.write(b"\n".join(lines) + b"\n")
+    ad = FileAdapter(path, frame_size=3)
+    it = ad.frames()
+    assert next(it) == lines[:3]
+    off = ad.offset
+    ad.stop()
+    re = FileAdapter(path, frame_size=3)
+    re.resume(off)
+    got = [ln for fr in re.frames() for ln in fr]
+    assert got == lines[3:]
+
+
+def test_synthetic_adapter_resume_is_deterministic():
+    full = [ln for fr in SyntheticAdapter(total=100, frame_size=10,
+                                          seed=5).frames() for ln in fr]
+    re = SyntheticAdapter(total=100, frame_size=10, seed=5)
+    re.resume(37)
+    tail = [ln for fr in re.frames() for ln in fr]
+    assert tail == full[37:]
+    assert re.offset == 100
+    with pytest.raises(ValueError):
+        re.resume(101)
+
+
+# ---------------------------------------------------------------------------
+# durable feed: clean run, no-op resume, crash-image resume
+# ---------------------------------------------------------------------------
+
+def test_durable_feed_clean_run_then_noop_resume(tmp_path):
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    h = mgr.submit(durable_plan(mgr, d, total=600, batch=50))
+    stats = h.join()
+    assert stats.records_in == 600
+    assert_exactly_once(h.storage, 600)
+    ck = CheckpointStore(str(d)).load()
+    assert ck is not None
+    assert ck["watermark"] == ck["last_seq"] > 0
+    assert ck["last_offset"] == 600
+    assert ck["partitions"] == {h.stage_groups[0].name: 2}
+    # resume after a clean shutdown: nothing to replay, nothing to
+    # re-obtain, and the recovered store is byte-identical
+    mgr2 = make_manager()
+    h2 = mgr2.resume(durable_plan(mgr2, d, total=600, batch=50))
+    assert h2.durability.recovered
+    assert h2.durability.replayed_records == 0
+    assert h2.join().records_in == 0
+    assert_exactly_once(h2.storage, 600)
+
+
+def copy_crash_image(src, dst):
+    """Copy a live durable dir in crash-causal order: checkpoints first,
+    then store manifests, then data files (WAL segments, npz segments) —
+    so a reference in a copied metadata file always points at data that
+    was copied *later* (hence at least as new), exactly the invariant
+    the fsync ordering gives a real crash.  Tolerates files vanishing
+    mid-walk."""
+    paths = []
+    for root, _, names in os.walk(src):
+        for n in names:
+            p = os.path.join(root, n)
+            if n.endswith(".tmp"):
+                continue
+            if n.startswith("CHECKPOINT"):
+                rank = 0
+            elif n.startswith("MANIFEST"):
+                rank = 1
+            else:
+                rank = 2
+            paths.append((rank, p))
+    for _, p in sorted(paths):
+        rel = os.path.relpath(p, src)
+        out = os.path.join(dst, rel)
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        try:
+            shutil.copyfile(p, out)
+        except FileNotFoundError:
+            continue
+
+
+def test_crash_image_resume_is_exactly_once(tmp_path):
+    """The tentpole invariant, in-process: copy the durable dir at
+    random moments while a rate-limited durable feed runs (mid-write
+    copies are crash images), then resume every image in a fresh
+    process-image (fresh manager/refstore/adapter) and verify zero rows
+    lost, zero duplicated."""
+    total, batch = 600, 25
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    plan = durable_plan(mgr, d, total=total, batch=batch, rate=1500.0,
+                        checkpoint_interval_s=0.1, fsync_interval_s=0.02)
+    rng = random.Random(11)
+    images = [str(tmp_path / f"img{i}") for i in range(3)]
+    h = mgr.submit(plan)
+    t_run = total / 1500.0
+    for img in images:
+        time.sleep(rng.uniform(0.05, t_run / 2))
+        copy_crash_image(str(d), img)
+    h.join()
+    assert_exactly_once(h.storage, total)
+    for img in images:
+        mgr2 = make_manager()
+        # plan points at the ORIGINAL dir; durable_dir re-points it (the
+        # _override_dir path, spill_dir re-derived)
+        p2 = durable_plan(mgr2, d, total=total, batch=batch)
+        h2 = mgr2.resume(p2, durable_dir=img)
+        assert h2.durability.recovered
+        stats = h2.join()
+        assert_exactly_once(h2.storage, total)
+        # the resumed run re-obtained the unlogged suffix from the
+        # adapter and/or replayed the WAL tail; both are bounded by the
+        # original total
+        assert stats.records_in <= total
+        ck = CheckpointStore(img).load()
+        assert ck["watermark"] == ck["last_seq"]
+
+
+def test_stop_mid_feed_then_resume_completes_stream(tmp_path):
+    """A feed stopped mid-stream leaves a partial durable dir; a fresh
+    process resumes it and completes the stream exactly-once."""
+    total, batch = 800, 25
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    plan = durable_plan(mgr, d, total=total, batch=batch, rate=2000.0,
+                        checkpoint_interval_s=0.1, fsync_interval_s=0.01)
+    h = mgr.submit(plan)
+    time.sleep(0.15)
+    h.stop()                  # adapter dies mid-stream: a partial feed
+    h.join()
+    assert 0 < h.stats.records_in <= total
+    # the durable dir now looks like a crash at the stop point; a fresh
+    # "process" resumes and completes the stream
+    mgr2 = make_manager()
+    h2 = mgr2.resume(durable_plan(mgr2, d, total=total, batch=batch))
+    h2.join()
+    assert_exactly_once(h2.storage, total)
+
+
+# ---------------------------------------------------------------------------
+# repair event-log checkpoint/restore + lineage trust
+# ---------------------------------------------------------------------------
+
+def test_repair_event_snapshot_restore_round_trip(tmp_path):
+    mgr = make_manager()
+    plan = durable_plan(mgr, tmp_path / "d0", refresh=RepairSpec())
+    job = RepairJob(plan, StorageJob(1), mgr.refstore, mgr.predeploy)
+    t = mgr.refstore["safety_levels"]
+    t.upsert(np.arange(4, dtype=np.int64),
+             safety_level=np.full(4, 2, np.int32))
+    t.upsert(np.arange(90000, 90002, dtype=np.int64),
+             safety_level=np.full(2, 1, np.int32))
+    img = job.snapshot_events()
+    job.stop()
+    assert len(img["safety_levels"]) == 2
+    json.dumps(img)                       # checkpoint-serializable
+    job2 = RepairJob(plan, StorageJob(1), mgr.refstore, mgr.predeploy)
+    job2.restore_events(img)
+    with job2._events_lock:
+        evs = list(job2._events["safety_levels"])
+    assert [e.version for e in evs] == \
+        [e[0] for e in img["safety_levels"]]
+    assert evs[0].keys.tolist() == [0, 1, 2, 3]
+    assert job2._oldest_pending is not None
+    job2.stop()
+
+
+def test_resume_restores_repair_events_when_fingerprints_match(tmp_path):
+    """Same rebuilt reference state -> the checkpointed event journal is
+    trusted and lineage survives: resuming a converged feed repairs
+    nothing."""
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    h = mgr.submit(durable_plan(mgr, d, total=400, batch=50,
+                                refresh=RepairSpec()))
+    h.join()
+    ck = CheckpointStore(str(d)).load()
+    assert "ref_fingerprints" in ck and "repair_events" in ck
+    mgr2 = make_manager()                 # same seed -> same tables
+    h2 = mgr2.resume(durable_plan(mgr2, d, total=400, batch=50,
+                                  refresh=RepairSpec()))
+    stats = h2.join()
+    assert_exactly_once(h2.storage, 400)
+    assert stats.repaired_rows == 0       # lineage trusted: nothing stale
+
+
+def test_resume_resets_lineage_on_fingerprint_mismatch(tmp_path):
+    """Changed reference state across the restart -> recovered lineage
+    is meaningless: it must degrade to a full re-scan that re-enriches
+    against the CURRENT tables (never silently-current)."""
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    h = mgr.submit(durable_plan(mgr, d, total=400, batch=50,
+                                refresh=RepairSpec()))
+    h.join()
+    mgr2 = make_manager()
+    t = mgr2.refstore["safety_levels"]
+    snap = t.snapshot()
+    keys = np.asarray(snap.arrays["key"][:snap.size][:50], np.int64)
+    t.upsert(keys, safety_level=np.full(keys.size, 4, np.int32))
+    h2 = mgr2.resume(durable_plan(mgr2, d, total=400, batch=50,
+                                  refresh=RepairSpec()))
+    stats = h2.join()
+    assert_exactly_once(h2.storage, 400)
+    # full re-scan happened and the store converged to the NEW table
+    assert_store_current(mgr2, h2.storage)
+    assert stats.repair is not None and stats.repair.units_scanned > 0
+
+
+def test_resume_at_learned_scale(tmp_path):
+    d = tmp_path / "dur"
+    mgr = make_manager()
+    h = mgr.submit(durable_plan(mgr, d, total=200, batch=50))
+    h.join()
+    gname = h.stage_groups[0].name
+    ck = CheckpointStore(str(d))
+    state = ck.load()
+    assert state["partitions"] == {gname: 2}
+    state["partitions"][gname] = 3        # pretend elasticity learned 3
+    ck.save(state)
+    mgr2 = make_manager()
+    h2 = mgr2.resume(durable_plan(mgr2, d, total=200, batch=50))
+    assert len(h2.stage_groups[0].holders) == 3
+    h2.join()
+    assert_exactly_once(h2.storage, 200)

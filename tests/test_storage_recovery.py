@@ -329,6 +329,86 @@ def test_update_lineage_matches_unit_boundaries(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# manifest durability (satellite: fsync'd atomic rename + .bak fallback)
+# ---------------------------------------------------------------------------
+
+def test_recover_torn_manifest_falls_back_to_bak(tmp_path):
+    """A torn/empty MANIFEST.json (crash mid-replace on a reordering
+    filesystem) recovers from the ``.bak`` predecessor: state regresses
+    one flush, never silently to empty."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b1 = batch_of(10, seed=31)
+    p.insert(b1, upsert=False, lineage={"t": 1})       # -> manifest v1
+    p.insert(batch_of(10, seed=32, start_id=1000), upsert=False,
+             lineage={"t": 2})                         # -> v2, v1 = .bak
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    assert os.path.exists(man + ".bak")
+    with open(man, "w"):
+        pass                                           # torn: zero bytes
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert fresh.count == 10                           # the v1 state
+    assert fresh.get(int(b1["id"][3])) is not None
+    # half-written JSON and non-dict JSON fall back the same way
+    for garbage in ('{"format": 2, "segments": 2, "seg_fi', "42"):
+        with open(man, "w") as f:
+            f.write(garbage)
+        again = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+        assert again.count == 10
+
+
+def test_recover_garbage_manifest_without_bak_raises(tmp_path):
+    """An unreadable manifest with no usable .bak must raise, not
+    silently recover an empty partition (that would drop data)."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    p.insert(batch_of(10, seed=33), upsert=False, lineage={"t": 1})
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    assert not os.path.exists(man + ".bak")            # first-ever flush
+    with open(man, "w") as f:
+        f.write("not json{")
+    with pytest.raises(RuntimeError, match="MANIFEST"):
+        StoragePartition(0, spill_dir=str(tmp_path)).recover()
+
+
+def test_durable_wal_storage_round_trip(tmp_path):
+    """Storage-level exactly-once: a crash between checkpoint and WAL
+    truncation makes replay at-least-once; the conditional pk-index
+    insert (upsert=False) turns redelivery into a no-op."""
+    from repro.core.durability import CheckpointStore, IntakeLog
+    from repro.core.records import batch_rows
+
+    wal_dir = os.path.join(str(tmp_path), "intake")
+    store_dir = os.path.join(str(tmp_path), "store")
+    wal = IntakeLog(wal_dir, fsync="always")
+    sj = StorageJob(2, spill_dir=store_dir, segment_rows=40)
+    src = SyntheticTweets(seed=41)
+    seqs = []
+    for i in range(6):
+        lines = src.raw_lines(20)
+        seqs.append(wal.append_frame((i + 1) * 20, lines))
+        sj.write(parse_json_lines(lines))
+    sj.flush()
+    # checkpoint claims only the first 3 frames; "crash" before truncate
+    CheckpointStore(str(tmp_path)).save({"watermark": seqs[2]})
+    wal.close()
+
+    fresh = StorageJob(2, spill_dir=store_dir).recover()
+    assert fresh.count == 120                          # all flushed rows
+    ck = CheckpointStore(str(tmp_path)).load()
+    wal2 = IntakeLog(wal_dir, fsync="always")
+    try:
+        replayed = list(wal2.replay(ck["watermark"]))
+        assert [r.seq for r in replayed] == seqs[3:]
+        stored = sum(fresh.write(parse_json_lines(r.lines))
+                     for r in replayed)
+    finally:
+        wal2.close()
+    assert stored == 0                                 # pure redelivery
+    assert fresh.count == 120
+    assert sum(batch_rows(p.read_rows(0, p.count))
+               for p in fresh.partitions if p.count) == 120
+
+
+# ---------------------------------------------------------------------------
 # feedlint R3 fix: get() must not decompress a segment under the lock
 # ---------------------------------------------------------------------------
 
