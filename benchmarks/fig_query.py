@@ -26,6 +26,17 @@ Sections:
                  dead rows reclaimed, identical query results, and a
                  smaller scanned-row footprint after.
 
+  merged_read    the read-path overhaul A/B (``--merge`` x
+                 ``--batched-agg``): a store flushed at 2K-row segments
+                 is queried with a selective predicate + group-by
+                 aggregation four ways — eager per-unit aggregation over
+                 the unmerged layout (the pre-merge read path), the
+                 one-dispatch batched path, then both again after
+                 ``merge_now`` folds the small segments into leveled
+                 runs.  Results asserted bitwise identical on every
+                 side.  Acceptance at full scale: merged + batched
+                 >= 1.5x the unmerged eager path.
+
 Every section asserts its internal invariants, so the bench-smoke CI job
 (tiny row counts) exercises the real driver end to end.
 """
@@ -234,11 +245,85 @@ def bench_compaction(mgr, total, batch, spill_dir, reps=5):
     emit(FIG, "scan_after_compact_ms", 1e3 * _median(walls_a), "ms",
          f"same query over {after.stats.rows_scanned} live rows "
          f"({after.stats.units} units; unit count is unchanged — "
-         "compaction rewrites in place, it does not merge, so per-unit "
-         "overhead persists at tiny segment sizes)")
+         "in-place rewrites keep segment boundaries; the merged_read "
+         "section measures what leveled merging buys on top)")
 
 
-def main(total: int = 60_000, batch: int = BATCH_1X) -> None:
+def bench_merged_read_path(mgr, total, batch, spill_dir, merge=True,
+                           batched=True, reps=7):
+    """The tentpole A/B: leveled merging x batched aggregation against
+    the eager-per-unit / unmerged read path on the same data."""
+    from repro.core import CompactionJob
+
+    seg_rows = min(2000, max(total // 24, 100))
+    h = mgr.submit(q1_store_plan(
+        SyntheticAdapter(total=total, frame_size=batch, seed=19),
+        "qp-merge", batch, spill_dir=spill_dir, segment_rows=seg_rows))
+    s = h.join(timeout=1200)
+    assert s.stored == total, (s.stored, total)
+    h.storage.flush()
+
+    # selective non-clustered predicate + grouped aggregation: zone maps
+    # cannot prune it, so the cost is per-unit decompression + dispatch —
+    # exactly what merging and batching attack
+    q = (h.query().where(col("safety_level") >= 3)
+         .group_by("safety_level")
+         .agg(n=agg.count(), s=agg.sum("created_at"),
+              top=agg.topk("safety_level", 2, payload="id")))
+
+    def measure(batched_flag):
+        r = q.execute(batched=batched_flag)
+        walls = [q.execute(batched=batched_flag).stats.wall_s
+                 for _ in range(reps)]
+        return _median(walls), r
+
+    base_w, base_r = measure(False)        # the pre-overhaul read path
+    emit(FIG, "unmerged_eager_scan_ms", 1e3 * base_w, "ms",
+         f"eager per-unit aggregation over {base_r.stats.units} units "
+         f"({seg_rows}-row segments); dispatches="
+         f"{base_r.stats.agg_invocations}")
+    if batched:
+        bat_w, bat_r = measure(True)
+        for k in base_r:
+            np.testing.assert_array_equal(base_r[k], bat_r[k])
+        emit(FIG, "batched_agg_speedup", base_w / bat_w, "ratio",
+             f"one-dispatch batched aggregation, same layout: "
+             f"{bat_r.stats.agg_batched_units} units folded into "
+             f"{bat_r.stats.agg_invocations} dispatches "
+             f"(kernel={bat_r.stats.agg_kernel_dispatches}, "
+             f"fallback={bat_r.stats.agg_fallback_dispatches}, "
+             f"64bit={bat_r.stats.agg_64bit_fallbacks})")
+    if merge:
+        segs_before = h.storage.segment_count
+        job = CompactionJob(h.storage, CompactionSpec(
+            budget_rows_s=1e6, merge_fanin=8,
+            level_target_rows=8 * seg_rows))
+        job.merge_now(min_run=2)
+        segs_after = h.storage.segment_count
+        assert segs_after < segs_before, "merge_now merged nothing"
+        emit(FIG, "segments_before_merge", segs_before, "segments",
+             f"{seg_rows}-row flush-size segments across "
+             f"{len(h.storage.partitions)} partitions")
+        emit(FIG, "segments_after_merge", segs_after, "segments",
+             f"levels={h.storage.level_histogram()}; "
+             f"{job.stats.merges} merges consumed "
+             f"{job.stats.segments_merged} segments")
+        merged_w, merged_r = measure(batched)
+        for k in base_r:                   # acceptance: identical
+            np.testing.assert_array_equal(base_r[k], merged_r[k])
+        ratio = base_w / merged_w
+        emit(FIG, "merged_scan_speedup", ratio, "ratio",
+             f"merged{'+batched' if batched else ''} "
+             f"({merged_r.stats.units} units) vs unmerged eager "
+             f"({base_r.stats.units} units); acceptance at full "
+             "scale: >= 1.5x")
+        if total >= 20_000 and batched:
+            assert ratio >= 1.5, ratio
+    return h
+
+
+def main(total: int = 60_000, batch: int = BATCH_1X, merge: bool = True,
+         batched: bool = True) -> None:
     mgr = make_manager(scale=0.02)
     work = tempfile.mkdtemp(prefix="fig_query_")
     try:
@@ -247,6 +332,8 @@ def main(total: int = 60_000, batch: int = BATCH_1X) -> None:
                               f"{work}/live")
         bench_compaction(mgr, max(total // 3, 4 * batch), batch,
                          f"{work}/churn")
+        bench_merged_read_path(mgr, total, batch, f"{work}/merge",
+                               merge=merge, batched=batched)
     finally:
         shutil.rmtree(work, ignore_errors=True)
 
@@ -255,10 +342,17 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--total", type=int, default=60_000)
     ap.add_argument("--batch", type=int, default=BATCH_1X)
+    ap.add_argument("--merge", choices=("on", "off"), default="on",
+                    help="A/B axis: leveled segment merging in the "
+                         "merged_read section")
+    ap.add_argument("--batched-agg", choices=("on", "off"), default="on",
+                    help="A/B axis: one-dispatch batched aggregation in "
+                         "the merged_read section")
     ap.add_argument("--json-out", default="BENCH_fig_query.json",
                     help="machine-readable metrics file "
                          "(empty string disables)")
     args = ap.parse_args()
-    main(args.total, args.batch)
+    main(args.total, args.batch, merge=args.merge == "on",
+         batched=args.batched_agg == "on")
     if args.json_out:
         write_json(FIG, args.json_out)

@@ -43,7 +43,8 @@ import numpy as np
 
 from benchmarks.common import BATCH_1X, emit, make_manager, write_json
 from benchmarks.fig_repair import RollingUpdater
-from repro.core import DurableSpec, RepairSpec, SyntheticAdapter, pipeline
+from repro.core import (CompactionSpec, DurableSpec, RepairSpec,
+                        SyntheticAdapter, pipeline)
 from repro.core.enrich import queries as Q
 
 FIG = "fig_recovery"
@@ -59,7 +60,17 @@ def durable_plan(durable_dir: str, total: int, batch: int, seed: int,
             .parse(batch_size=batch)
             .options(num_partitions=2, holder_capacity=16)
             .enrich(Q.Q1)
-            .store(durable=DurableSpec(dir=durable_dir,
+            # small flush segments + an aggressive leveled-merge policy:
+            # segment merges rewrite the store WHILE the kill window is
+            # open, so every crash image also stresses the merge path's
+            # manifest-before-GC ordering (exactly-once must still hold)
+            .store(segment_rows=500, sort_key="country",
+                   compact=CompactionSpec(budget_rows_s=1e6,
+                                          interval_s=0.05,
+                                          yield_backlog_batches=1e9,
+                                          merge_fanin=4,
+                                          level_target_rows=100_000),
+                   durable=DurableSpec(dir=durable_dir,
                                        fsync="interval",
                                        fsync_interval_s=0.02,
                                        checkpoint_interval_s=0.3),

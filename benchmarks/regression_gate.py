@@ -55,6 +55,11 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
             # snapshot scans under ingestion stay bounded (smoke: just
             # "finite and sane", the figure claims the real bound)
             ("live_query_p95_ms", "<=", 10_000),
+            # the read-path overhaul axes must not LOSE to the eager /
+            # unmerged path even at smoke scale (presence enforced: a
+            # driver that silently drops the merged_read section fails)
+            ("batched_agg_speedup", ">=", 0.5),
+            ("merged_scan_speedup", ">=", 0.5),
         ],
         "fig25": [
             # the controller must reach a usable fraction of the best
@@ -80,7 +85,12 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
         ],
         "fig_query": [
             ("prune_speedup", ">=", 2.0),
-            ("live_query_p95_ms", "<=", 1_000),
+            ("live_query_p95_ms", "<=", 500),
+            # acceptance: merged + batched selective scan beats the
+            # pre-overhaul read path by 1.5x at 2K-row segments; the
+            # batched axis alone must never regress the eager path
+            ("batched_agg_speedup", ">=", 1.0),
+            ("merged_scan_speedup", ">=", 1.5),
         ],
         "fig25": [
             ("bursty_elastic_vs_best_static", ">=", 0.9),

@@ -23,6 +23,8 @@ Run:  PYTHONPATH=src python examples/pipeline_quickstart.py
 (examples/quickstart.py shows the pre-plan FeedConfig shim.)
 """
 
+import shutil
+import tempfile
 import threading
 import time
 
@@ -170,3 +172,52 @@ assert res2["n"].tolist() == res["n"].tolist()
 assert feed2.storage.dead_rows == 0
 print(f"compaction: reclaimed {dropped} superseded row versions "
       f"(scan now touches {res2.stats.rows_scanned} rows)")
+
+# 6. leveled segment merging: a spilled store flushes at ingestion
+#    granularity (many small segments), and `compact=CompactionSpec(
+#    level_target_rows=...)` makes the background compactor fold
+#    contiguous runs of small segments into one next-level segment —
+#    re-sorted on sort_key, zone maps rebuilt — so per-unit scan overhead
+#    shrinks as data ages.  `merge_now()` runs the same policy
+#    synchronously.  Queries are answered identically before and after
+#    (asserted below); they also default to BATCHED aggregation: all
+#    surviving units concatenate into one dispatch per aggregate.
+work = tempfile.mkdtemp(prefix="quickstart_store_")
+try:
+    merge_plan = (pipeline(SyntheticAdapter(total=10_000, frame_size=420,
+                                            seed=3), "MergeDemo")
+                  .parse(batch_size=420)
+                  .options(num_partitions=1)
+                  .enrich(Q.Q1)
+                  .store(spill_dir=work, segment_rows=500,
+                         sort_key="country",
+                         compact=CompactionSpec(budget_rows_s=100_000,
+                                                merge_fanin=8,
+                                                level_target_rows=8_000)))
+    feed3 = mgr.submit(merge_plan)
+    feed3.join()
+    feed3.storage.flush()
+    q3 = (feed3.query().where(col("safety_level") >= 3)
+          .group_by("safety_level")
+          .agg(n=agg.count(), s=agg.sum("created_at")))
+    pre = q3.execute()
+    segs_before = feed3.storage.segment_count
+    hist_before = feed3.storage.level_histogram()
+    feed3.compaction.merge_now(min_run=2)
+    segs_after = feed3.storage.segment_count
+    hist_after = feed3.storage.level_histogram()
+    post = q3.execute()
+    for k in pre:                   # merging never changes an answer
+        np.testing.assert_array_equal(pre[k], post[k])
+    assert segs_after < segs_before
+    print(f"merge: {segs_before} segments {dict(sorted(hist_before.items()))}"
+          f" -> {segs_after} {dict(sorted(hist_after.items()))}; "
+          f"query units {pre.stats.units} -> {post.stats.units}, "
+          f"answers identical")
+    print(f"batched agg: {post.stats.agg_batched_units} units in "
+          f"{post.stats.agg_invocations} dispatches "
+          f"(kernel={post.stats.agg_kernel_dispatches} "
+          f"fallback={post.stats.agg_fallback_dispatches} "
+          f"64bit={post.stats.agg_64bit_fallbacks})")
+finally:
+    shutil.rmtree(work, ignore_errors=True)

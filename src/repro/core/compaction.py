@@ -21,20 +21,27 @@ The job shares the repair scheduler's citizenship model — it is a
     layer's per-segment counters — no scan needed to decide) at or above
     ``min_dead_frac``.
 
+Beyond dead-row reclaim the job also owns the **leveled merge policy**
+(``level_target_rows``/``merge_fanin``): contiguous runs of small
+segments are merged into one next-level segment, re-sorted on the
+store's ``sort_key`` and with zone maps rebuilt, so per-unit scan
+overhead shrinks as data ages (see docs/STORAGE.md).
+
 Correctness is owned by the storage layer's primitives
-(``compact_segment``/``compact_chunks``): the decide+rewrite+swap runs
-atomically under the partition lock, the layout epoch bump fences
-in-flight conditional repairs, and pinned query snapshots keep replaced
-segment files readable until released.  This module only *schedules*.
-``drain()`` compacts everything regardless of budget (benchmarks and
-tests use it to assert 100% reclaim)."""
+(``compact_segment``/``compact_chunks``/``merge_segments``): the
+decide+rewrite+swap runs atomically under the partition lock, the layout
+epoch bump fences in-flight conditional repairs, and pinned query
+snapshots keep replaced segment files readable until released.  This
+module only *schedules*.  ``drain()`` compacts everything regardless of
+budget (benchmarks and tests use it to assert 100% reclaim);
+``merge_now()`` is the synchronous analogue for merging."""
 
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core.repair import feed_busy
 from repro.core.storage import StorageJob
@@ -47,12 +54,23 @@ class CompactionSpec:
     ``budget_rows_s`` caps rewritten rows/s (the knob trading space reclaim
     against ingestion interference); ``min_dead_frac`` is the per-unit
     trigger — rewriting a segment that is 2% garbage wastes IO, one that is
-    half garbage halves the scan cost of every future query over it."""
+    half garbage halves the scan cost of every future query over it.
+
+    ``level_target_rows`` > 0 additionally enables **leveled merging**
+    (size-tiered): a contiguous run of at least ``merge_fanin`` flushed
+    segments, each smaller than the target, is merged into ONE segment at
+    the next level — re-sorted on the store's ``sort_key``, zone maps
+    rebuilt — so per-unit scan overhead shrinks as data ages instead of
+    staying flat at flush-size segments.  A segment at or above the
+    target **graduates**: it is never merged again, which bounds write
+    amplification to O(log_fanin(target/flush)) copies per row."""
     budget_rows_s: float = 50_000.0
     min_dead_frac: float = 0.25
     interval_s: float = 0.25       # scheduler cadence
     yield_backlog_batches: float = 0.0   # same semantics as RepairSpec's
     burst_s: float = 0.1
+    merge_fanin: int = 8           # max (and trigger) segments per merge
+    level_target_rows: int = 0     # 0 disables merging
 
     def __post_init__(self):
         if self.budget_rows_s <= 0:
@@ -63,6 +81,10 @@ class CompactionSpec:
             raise ValueError("interval_s and burst_s must be > 0")
         if self.yield_backlog_batches < 0:
             raise ValueError("yield_backlog_batches must be >= 0")
+        if self.merge_fanin < 2:
+            raise ValueError("merge_fanin must be >= 2")
+        if self.level_target_rows < 0:
+            raise ValueError("level_target_rows must be >= 0")
 
 
 @dataclasses.dataclass
@@ -74,6 +96,38 @@ class CompactionStats:
     steps: int = 0
     yields: int = 0
     compact_s: float = 0.0
+    merges: int = 0              # merge operations (K segments -> 1)
+    segments_merged: int = 0     # input segments consumed by merges
+    rows_merged: int = 0         # rows read (live + dead) by merges
+
+
+def find_merge_run(stats, fanin: int, target_rows: int,
+                   min_run: Optional[int] = None
+                   ) -> Optional[Tuple[int, int, int]]:
+    """First mergeable run in one partition's ``segment_stats()`` output:
+    ``(start_index, count, total_rows)`` over a contiguous run of
+    below-target segments at least ``min_run`` (default: ``fanin``) long,
+    capped at ``fanin`` inputs per merge — or None.  Pure policy; the
+    caller re-validates against the live layout via ``merge_segments``'s
+    own bounds check."""
+    if target_rows <= 0:
+        return None
+    need = fanin if min_run is None else min_run
+    i, nseg = 0, len(stats)
+    while i < nseg:
+        if stats[i][0] >= target_rows:
+            i += 1
+            continue
+        j = i                     # extend the run, up to fanin inputs
+        while j < nseg and stats[j][0] < target_rows and j - i < fanin:
+            j += 1
+        if j - i >= max(need, 2):
+            return (i, j - i,
+                    int(sum(rows for rows, _d, _l in stats[i:j])))
+        while j < nseg and stats[j][0] < target_rows:
+            j += 1                # run too short: skip past all of it
+        i = j
+    return None
 
 
 class CompactionJob(threading.Thread):
@@ -134,7 +188,10 @@ class CompactionJob(threading.Thread):
             frac = 0.0 if force else self.spec.min_dead_frac
             dropped = 0
             for part in self.storage.partitions:
-                for si, rows, dead in part.garbage_units():
+                # reversed: an all-dead segment is deleted outright,
+                # shifting later indices — walking high-to-low keeps
+                # the rest of this stale snapshot valid
+                for si, rows, dead in reversed(part.garbage_units()):
                     if rows == 0 or dead == 0 or \
                             (rows and dead / rows < frac):
                         continue
@@ -150,8 +207,51 @@ class CompactionJob(threading.Thread):
                     self.stats.rows_dropped += got
                     self.stats.rows_rewritten += rows - got
                     dropped += got
+            if self.spec.level_target_rows > 0:
+                dropped += self._merge_pass(force)
             self.stats.compact_s += time.perf_counter() - t0
             return dropped
+
+    def _merge_pass(self, force: bool,  # requires-lock: _step_lock
+                    min_run: Optional[int] = None) -> int:
+        """Leveled-merge scheduling pass over every partition; returns
+        rows dropped (dead versions that vanish inside merges).  Policy
+        is ``find_merge_run``; correctness (epoch fence, pinned-snapshot
+        GC, manifest ordering) is ``StoragePartition.merge_segments``."""
+        spec = self.spec
+        dropped = 0
+        for part in self.storage.partitions:
+            while force or self._tokens > 0:
+                run = find_merge_run(part.segment_stats(),
+                                     spec.merge_fanin,
+                                     spec.level_target_rows, min_run)
+                if run is None:
+                    break
+                si, count, run_rows = run
+                if not force:
+                    self._tokens -= run_rows   # merges rewrite every row
+                try:
+                    n, got = part.merge_segments(si, count)
+                except IndexError:
+                    break    # layout moved since segment_stats(); retry
+                self.stats.merges += 1
+                self.stats.segments_merged += count
+                self.stats.rows_merged += n
+                self.stats.rows_dropped += got
+                self.stats.rows_rewritten += n - got
+                dropped += got
+        return dropped
+
+    def merge_now(self, min_run: int = 2) -> int:
+        """Synchronously merge every eligible run, ignoring the budget
+        and relaxing the fanin trigger to runs of ``min_run`` segments;
+        returns rows dropped.  Benchmarks, tests, and the quickstart use
+        it to age a store on demand (the background scheduler does the
+        same work incrementally via ``step``)."""
+        with self._step_lock:
+            if self.spec.level_target_rows <= 0:
+                return 0
+            return self._merge_pass(True, min_run=min_run)
 
     # -------------------------------------------------------------- drain
     def drain(self, timeout: Optional[float] = 60.0) -> bool:

@@ -1,9 +1,13 @@
 """Durable feeds: write-ahead intake log + coordinated checkpoints.
 
 The column store survives a crash (``StoragePartition.recover()``:
-manifest + lineage + zone maps + layout epoch) but, before this module,
-the *feed* did not: adapter offsets, in-flight holder frames, repair's
-event journal and the learned elastic scale all lived in memory.  This
+manifest — any format, 1 through 3 — with lineage, zone maps, segment
+levels and the layout epoch; a compaction or leveled merge commits its
+rewritten manifest BEFORE queueing replaced files for GC, so the
+checkpoint protocol below never cites storage state that a crash could
+tear) but, before this module, the *feed* did not: adapter offsets,
+in-flight holder frames, repair's event journal and the learned elastic
+scale all lived in memory.  This
 module is the durability half of the fix; ``core/recovery.py`` is the
 restart half.  The design follows "Scalable Fault-Tolerant Data Feeds
 in AsterixDB" (PAPERS.md): log the intake *before* acknowledging it,

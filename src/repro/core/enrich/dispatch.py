@@ -44,10 +44,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.refdata import KEY_SENTINEL
 from repro.kernels import (dispatch_mode,  # noqa: F401  (re-export: scoped
@@ -79,6 +80,14 @@ class DispatchConfig:
 _config = DispatchConfig()
 _stats_lock = threading.Lock()              # lock-name: dispatch-stats
 _bucket_hits: Dict[Tuple[str, int], int] = {}   # guarded-by: _stats_lock
+# (op, path) execution-path counters for the segment_* aggregation ops:
+# "kernel" = Pallas kernel, "xla_64bit" = the EXPLICIT wide-dtype XLA
+# fallback (the MXU kernel accumulates in 32 bits; a hi/lo split
+# accumulator is TPU-future work — see ROADMAP), "reference" = jnp path
+# via mode/size/envelope routing.  Callers that need a per-query view
+# (QueryStats' kernel-vs-fallback report) use the thread-local tape.
+_path_hits: Dict[Tuple[str, str], int] = {}     # guarded-by: _stats_lock
+_tls = threading.local()                    # per-thread path tape
 
 
 def configure(min_pallas_rows: Optional[int] = None,
@@ -125,6 +134,41 @@ def reset_bucket_stats() -> None:
 def _note(op: str, bucket: int) -> None:
     with _stats_lock:
         _bucket_hits[(op, bucket)] = _bucket_hits.get((op, bucket), 0) + 1
+
+
+def path_stats() -> Dict[Tuple[str, str], int]:
+    """(op, path) -> dispatch count for the segment_* aggregation ops;
+    path is "kernel", "xla_64bit" (wide-dtype fallback, explicit by
+    design), or "reference" (mode/size/envelope routing)."""
+    with _stats_lock:
+        return dict(_path_hits)
+
+
+def reset_path_stats() -> None:
+    with _stats_lock:
+        _path_hits.clear()
+
+
+def path_tape_start() -> None:
+    """Start recording this thread's segment_* dispatch paths (the query
+    layer wraps one execute() in a tape to report kernel-vs-fallback
+    counts without cross-thread noise from concurrent feeds)."""
+    _tls.paths = {}
+
+
+def path_tape_stop() -> Dict[Tuple[str, str], int]:
+    """Stop this thread's tape and return its (op, path) counts."""
+    d = getattr(_tls, "paths", None) or {}
+    _tls.paths = None
+    return d
+
+
+def _note_path(op: str, path: str) -> None:
+    with _stats_lock:
+        _path_hits[(op, path)] = _path_hits.get((op, path), 0) + 1
+    d = getattr(_tls, "paths", None)
+    if d is not None:
+        d[(op, path)] = d.get((op, path), 0) + 1
 
 
 def _use_pallas(rows: int) -> bool:
@@ -218,9 +262,18 @@ def _segment_64bit(values: Array) -> bool:
 def segment_sum(values: Array, seg: Array, num_segments: int,
                 valid: Optional[Array] = None) -> Array:
     r = values.shape[0]
-    if not _use_pallas(r) or _segment_64bit(values):
+    if _segment_64bit(values):
+        # explicit, not silent: wide dtypes CANNOT ride the MXU kernel
+        # (32-bit accumulator) in any mode — recorded as its own path so
+        # QueryStats can report which dispatches fell back and why
+        _note_path("segment_sum", "xla_64bit")
         from repro.core.enrich import ops
         return ops._segment_sum_ref(values, seg, num_segments, valid)
+    if not _use_pallas(r):
+        _note_path("segment_sum", "reference")
+        from repro.core.enrich import ops
+        return ops._segment_sum_ref(values, seg, num_segments, valid)
+    _note_path("segment_sum", "kernel")
     rk = bucket_rows(r)
     _note("segment_sum", rk)
     seg = seg.astype(jnp.int32)
@@ -258,8 +311,12 @@ def segment_topk(values: Array, seg: Array, payload: Array,
             # the composite-sort reference
             or not jnp.issubdtype(values.dtype, jnp.signedinteger)
             or jnp.dtype(values.dtype).itemsize > 4):
+        _note_path("segment_topk",
+                   "xla_64bit" if jnp.dtype(values.dtype).itemsize > 4
+                   else "reference")
         return ops._segment_topk_ref(values, seg, payload, num_segments,
                                      k, valid)
+    _note_path("segment_topk", "kernel")
     rk = bucket_rows(r)
     _note("segment_topk", rk)
     segi = seg.astype(jnp.int32)
@@ -277,3 +334,35 @@ def segment_topk(values: Array, seg: Array, payload: Array,
     val = jnp.where(found, jnp.take(values, safe, axis=0),
                     jnp.asarray(0, values.dtype))
     return pay, val
+
+
+# ---------------------------------------------------------------------------
+# batched-aggregation planner
+# ---------------------------------------------------------------------------
+
+def concat_rows(parts: Sequence[Dict[str, np.ndarray]]
+                ) -> Tuple[Dict[str, np.ndarray], int]:
+    """Concat-and-pad planner for the per-query batched aggregation path
+    (core/query.py): the per-unit masked column slices of one query are
+    concatenated IN SCAN ORDER into a single contiguous batch per column,
+    so the whole query pays one ``segment_*`` dispatch per aggregate
+    instead of one per surviving unit.  Returns ``(cols, n)`` with ``n``
+    real rows; the caller pads row dimensions to ``bucket_rows(n)`` when
+    it builds the segment-id vector (padding rows must route to the
+    dropped overflow segment, which only the caller can number).  Scan
+    order is preserved because downstream top-k tie-breaking is
+    value-desc-then-scan-order — identical to the eager per-unit path and
+    the naive reference.  The hit is recorded against the row bucket the
+    dispatches will use, so ``bucket_stats()`` shows batched queries
+    riding the same bounded jit-cache shape ladder as the write side."""
+    parts = [p for p in parts if p and next(iter(p.values())).shape[0]]
+    if not parts:
+        return {}, 0
+    if len(parts) == 1:
+        cols = {k: np.asarray(v) for k, v in parts[0].items()}
+    else:
+        cols = {k: np.concatenate([np.asarray(p[k]) for p in parts])
+                for k in parts[0]}
+    n = int(next(iter(cols.values())).shape[0])
+    _note("concat_rows", bucket_rows(n))
+    return cols, n

@@ -449,6 +449,13 @@ class Pipeline:
             raise PlanError(
                 f"store(sort_key={spec.sort_key!r}) is not a stored "
                 f"column; available: {sorted(delivered)}")
+        if spec.compact is not None and \
+                spec.compact.level_target_rows > 0 and not spec.spill_dir:
+            raise PlanError(
+                "compact=CompactionSpec(level_target_rows=...) enables "
+                "leveled segment merging, which only applies to FLUSHED "
+                "segments — set store(spill_dir=...) (or durable=..., "
+                "which implies one), or drop level_target_rows")
 
     def _check_durable(self, sinks, groups) -> None:
         """Durable-feed preconditions, rejected at compile time — not as

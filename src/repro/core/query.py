@@ -39,8 +39,14 @@ Four properties, in execution order:
     ids against an incrementally-grown sorted dictionary; the segment
     count is padded to a power-of-two bucket so the jit cache sees a
     bounded shape set, exactly like the write-side operators.  Integer
-    sums are widened to int64 first (dispatch's documented 64-bit XLA
-    fallback) so totals are exact.
+    sums are widened to int64 first (dispatch's EXPLICIT 64-bit XLA
+    fallback — reported per query via ``QueryStats``) so totals are
+    exact.  By default aggregation is **batched** (``execute(batched=
+    True)``): surviving units' masked rows are concatenated in scan
+    order (``dispatch.concat_rows``) so the whole query pays one
+    dispatch per aggregate instead of one per unit — at 2K-row segments
+    that is the difference between launch-overhead-bound and
+    compute-bound aggregation.
 
 ``QueryStats`` (on every result) reports units scanned vs pruned and row
 counts — the observability the fig_query benchmark and the pruning
@@ -322,6 +328,7 @@ class _GroupedAggregator:
     def __init__(self, key_col: Optional[str], aggs: Dict[str, AggSpec]):
         self.key_col = key_col
         self.aggs = aggs
+        self.batched_units = 0      # units deferred into the one batch
         self.keys = np.empty(0, np.int64)
         self._acc: Dict[str, np.ndarray] = {}
         self._cnt: Dict[str, np.ndarray] = {}
@@ -337,6 +344,20 @@ class _GroupedAggregator:
                 self._cnt[name] = np.empty(0, np.int64)
             if a.kind == "topk":
                 self._cand[name] = []
+
+    def columns_needed(self) -> Tuple[str, ...]:
+        """Columns ``consume`` reads: the group key plus every
+        aggregate's value/payload columns — what the batched path must
+        buffer per surviving unit."""
+        need = set()
+        if self.key_col is not None:
+            need.add(self.key_col)
+        for a in self.aggs.values():
+            if a.column is not None:
+                need.add(a.column)
+            if a.kind == "topk" and a.payload is not None:
+                need.add(a.payload)
+        return tuple(sorted(need))
 
     # ------------------------------------------------------------- consume
     def _dense_ids(self, kv: np.ndarray) -> np.ndarray:
@@ -534,6 +555,13 @@ class QueryStats:
     rows_live: int = 0           # after latest-wins
     rows_matched: int = 0        # after the predicate
     agg_invocations: int = 0     # dispatch-layer kernel calls
+    agg_batched_units: int = 0   # units folded into the one-dispatch batch
+    # execution-path split of the aggregate dispatches (dispatch.py's
+    # per-thread path tape): kernel vs fallback, with the wide-dtype XLA
+    # fallback (64-bit sums — kernel accumulates in 32 bits) called out
+    agg_kernel_dispatches: int = 0
+    agg_fallback_dispatches: int = 0
+    agg_64bit_fallbacks: int = 0
     wall_s: float = 0.0
 
 
@@ -620,26 +648,43 @@ class Query:
         return tuple(need)
 
     def execute(self, prune: bool = True,
-                snapshot: Optional[StoreSnapshot] = None) -> QueryResult:
+                snapshot: Optional[StoreSnapshot] = None,
+                batched: bool = True) -> QueryResult:
         """Run the query.  ``prune=False`` disables zone-map pruning (the
-        benchmark's A/B axis — results must be identical).  Passing a
-        ``snapshot`` runs against a view taken earlier (the caller keeps
-        ownership and must ``close()`` it); otherwise a fresh snapshot is
-        pinned for exactly this execution."""
+        benchmark's A/B axis — results must be identical).  ``batched``
+        (default) defers aggregation: surviving units' masked rows are
+        concatenated in scan order (``dispatch.concat_rows``) and the
+        whole query pays ONE ``segment_*`` dispatch per aggregate instead
+        of one per unit — results are identical either way (int sums are
+        64-bit exact and order-free, top-k tie-breaking is scan-order on
+        both paths).  Passing a ``snapshot`` runs against a view taken
+        earlier (the caller keeps ownership and must ``close()`` it);
+        otherwise a fresh snapshot is pinned for exactly this
+        execution."""
         if self._group is not None and not self._aggs:
             raise QueryError("group_by() without agg(): add at least one "
                              "aggregate (agg.count() counts group sizes)")
         if self._aggs and self._select is not None:
             raise QueryError("select() and agg() are mutually exclusive: "
                              "aggregates define the output columns")
+        from repro.core.enrich import dispatch
         t0 = time.perf_counter()
         stats = QueryStats()
         own = snapshot is None
         snap = StoreSnapshot(self._storage) if own else snapshot
+        tape = bool(self._aggs)
+        if tape:
+            dispatch.path_tape_start()
         try:
             need = self._needed_columns()
             gagg = _GroupedAggregator(self._group, self._aggs) \
                 if self._aggs else None
+            # batched-agg: per-unit masked slices of the columns consume
+            # reads (at least one column so the row count survives even
+            # a bare count() with no group key)
+            agg_cols = (gagg.columns_needed() or ("id",)) \
+                if gagg is not None else ()
+            pending: List[Dict[str, np.ndarray]] = []
             scanned: Dict[str, List[np.ndarray]] = {}
             sel_cols: Optional[Tuple[str, ...]] = None
             for ps in snap.parts:
@@ -663,7 +708,14 @@ class Query:
                         m = m & self._pred.mask(cols)
                     stats.rows_matched += int(m.sum())
                     if gagg is not None:
-                        gagg.consume(cols, m)
+                        if batched:
+                            if m.any():
+                                pending.append(
+                                    {k: np.asarray(cols[k])[m]
+                                     for k in agg_cols})
+                                stats.agg_batched_units += 1
+                        else:
+                            gagg.consume(cols, m)
                         continue
                     if sel_cols is None:
                         sel_cols = self._select if self._select is not None \
@@ -676,6 +728,9 @@ class Query:
                         scanned.setdefault(k, []).append(
                             np.asarray(cols[k])[m])
             if gagg is not None:
+                if pending:
+                    joined, n = dispatch.concat_rows(pending)
+                    gagg.consume(joined, np.ones(n, bool))
                 out = gagg.finish()
                 stats.agg_invocations = gagg.invocations
             elif sel_cols is None:       # empty store
@@ -683,8 +738,20 @@ class Query:
             else:
                 out = {k: np.concatenate(scanned[k]) if scanned[k]
                        else np.empty(0) for k in sel_cols}
+            if tape:
+                tape = False
+                paths = dispatch.path_tape_stop()
+                for (_op, path), c in paths.items():
+                    if path == "kernel":
+                        stats.agg_kernel_dispatches += c
+                    else:
+                        stats.agg_fallback_dispatches += c
+                        if path == "xla_64bit":
+                            stats.agg_64bit_fallbacks += c
             stats.wall_s = time.perf_counter() - t0
             return QueryResult(out, stats, snap.watermark)
         finally:
+            if tape:
+                dispatch.path_tape_stop()
             if own:
                 snap.close()

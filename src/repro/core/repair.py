@@ -47,12 +47,13 @@ the re-evaluated filter now rejects is **deleted** from the store
 ``repair_rows``, so a concurrent ingest upsert always wins and re-scans
 are no-ops; counted ``invalidated_rows``/``deleted_rows``).  Superseded
 and deleted row versions accumulate append-only until compaction
-(core/compaction.py) reclaims them; repair coordinates with compaction
-through the partition's **layout epoch** — a unit's epoch is captured
-with its scan and passed back to every conditional write, so a compaction
-that renumbered the position space mid-repair rejects the batch instead
-of letting a reused position number spuriously match (the unit stays
-stale and is simply re-scanned).
+(core/compaction.py) reclaims them; repair coordinates with compaction —
+and with its leveled segment MERGES, which additionally dissolve unit
+boundaries and re-sort rows across them — through the partition's
+**layout epoch**: a unit's epoch is captured with its scan and passed
+back to every conditional write, so a renumbering mid-repair rejects the
+batch instead of letting a reused position number spuriously match (the
+unit stays stale and is simply re-scanned).
 """
 
 from __future__ import annotations
@@ -426,19 +427,23 @@ class RepairJob(threading.Thread):
     def _repair_unit(self, part, start: int, n: int, lin: Lineage,
                      versions: Lineage, since: float) -> int:
         # layout-epoch capture: every conditional write below carries this
-        # epoch, so a compaction that renumbers the position space between
-        # the scan and the write rejects the batch (position numbers freed
-        # by a shrink are reused by later appends — without the epoch a
-        # stale positional check could spuriously match).  The rejected
-        # unit keeps its old lineage, stays stale, and is re-scanned.
+        # epoch, so a compaction or leveled merge that renumbers the
+        # position space between the scan and the write rejects the batch
+        # (position numbers freed by a shrink are reused by later appends
+        # — without the epoch a stale positional check could spuriously
+        # match; a merge additionally re-sorts rows ACROSS old unit
+        # boundaries, so even a count-preserving merge moves them).  The
+        # rejected unit keeps its old lineage, stays stale, and is
+        # re-scanned.
         epoch = part.epoch
         try:
             batch = part.read_rows(start, n)
         except IndexError:
-            return 0          # compaction shrank the partition mid-scan
+            return 0          # compaction/merge shrank the partition
         if int(batch["id"].shape[0]) != n:
-            # the unit list predates a compaction: the span now covers
-            # fewer rows.  Skip — the next step re-lists current units.
+            # the unit list predates a compaction or merge: the span now
+            # covers fewer rows (a merge also dissolves the boundary
+            # itself).  Skip — the next step re-lists current units.
             return 0
         self.stats.units_scanned += 1
         stale_tables = [t for t in self._tables

@@ -296,6 +296,7 @@ class StoragePartition:
         self._seg_lineage: List[Lineage] = []               # guarded-by: _lock
         self._seg_zmaps: List[ZoneMap] = []                 # guarded-by: _lock
         self._seg_dead: List[int] = []   # guarded-by: _lock — dead/segment
+        self._seg_level: List[int] = []  # guarded-by: _lock — merge generation
         self._chunk_dead = 0             # guarded-by: _lock — dead, buffered
         self._epoch = 0              # guarded-by: _lock — layout epoch
         self._pins = 0               # guarded-by: _lock — live snapshot views
@@ -401,6 +402,7 @@ class StoragePartition:
         self._seg_rows.append(n)
         self._seg_lineage.append(merge_lineage(self._chunk_lineage))
         self._seg_zmaps.append(compute_zone_map(seg, self.zone_map_cols))
+        self._seg_level.append(0)   # fresh flushes enter at level 0
         # exact recount for the new segment; buffered garbage moved with it
         live = self._index.lookup(seg["id"]) == np.arange(lo, lo + n)
         self._seg_dead.append(int(n - live.sum()))
@@ -414,7 +416,10 @@ class StoragePartition:
         # feedlint: allow[blocking-under-lock] manifest rewrite must be
         # consistent with the in-memory segment tables it snapshots
         man = self._seg_path("MANIFEST.json")
-        manifest = {"format": 2,
+        # format history: 1 = counts only (seg_files/lineage implicit),
+        # 2 = + per-segment lineage and zone maps, 3 = + per-segment
+        # merge levels.  recover() reads all three; see docs/STORAGE.md.
+        manifest = {"format": 3,
                     "segments": len(self._seg_files),
                     "rows": int(sum(self._seg_rows)),
                     "seq": self._seg_seq,
@@ -423,7 +428,8 @@ class StoragePartition:
                     "lineage": self._seg_lineage,
                     "zone_maps": [
                         {k: [v[0], v[1]] for k, v in zm.items()}
-                        for zm in self._seg_zmaps]}
+                        for zm in self._seg_zmaps],
+                    "levels": self._seg_level}
         with open(man + ".tmp", "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -515,6 +521,7 @@ class StoragePartition:
             self._rows_total = 0
             self._seg_files, self._seg_rows = [], []
             self._seg_lineage, self._seg_zmaps, self._seg_dead = [], [], []
+            self._seg_level = []
             manifest = self._load_manifest_locked()
             if manifest is None:
                 return self
@@ -523,6 +530,11 @@ class StoragePartition:
                 [f"seg{s:06d}.npz" for s in range(nseg)]
             lineage = manifest.get("lineage") or []
             zmaps = manifest.get("zone_maps") or []
+            # format < 3 has no "levels": every segment recovers as
+            # level 0, i.e. merge-eligible — the merge path then rebuilds
+            # zone maps unconditionally, so legacy segments regain
+            # pruning as they age
+            levels = manifest.get("levels") or []
             seg_ids: List[np.ndarray] = []
             row = 0
             for s in range(nseg):
@@ -538,6 +550,8 @@ class StoragePartition:
                 self._seg_zmaps.append(
                     {k: (v[0], v[1]) for k, v in zmaps[s].items()}
                     if s < len(zmaps) else {})
+                self._seg_level.append(
+                    int(levels[s]) if s < len(levels) else 0)
                 row += n
             self._seg_seq = int(manifest.get("seq", nseg))
             self._rows_total = row
@@ -611,6 +625,23 @@ class StoragePartition:
             out.append((None, self._rows_buffered, self._chunk_dead))
             return out
 
+    def segment_stats(self) -> List[Tuple[int, int, int]]:
+        """Merge-policy input: ``(rows, dead, level)`` per flushed
+        segment, in segment order (the list index IS the segment index a
+        subsequent ``merge_segments`` call takes — callers must tolerate
+        rejection if the layout moved in between)."""
+        with self._lock:
+            return list(zip(self._seg_rows, self._seg_dead,
+                            self._seg_level))
+
+    def level_histogram(self) -> Dict[int, int]:
+        """``{level: segment count}`` over the flushed segments."""
+        with self._lock:
+            hist: Dict[int, int] = {}
+            for lv in self._seg_level:
+                hist[lv] = hist.get(lv, 0) + 1
+            return hist
+
     def compact_segment(self, si: int) -> int:
         """Rewrite flushed segment ``si`` without its superseded/deleted
         row versions and rebuild its zone maps; returns rows dropped.
@@ -632,7 +663,16 @@ class StoragePartition:
                 seg = {k: f[k] for k in f.files}
             n = int(seg["id"].shape[0])
             lo = int(sum(self._seg_rows[:si]))
-            live = self._index.lookup(seg["id"]) == np.arange(lo, lo + n)
+            pos = self._index.lookup(seg["id"])
+            live = pos == np.arange(lo, lo + n)
+            # a superseded version whose NEWER version still sits in a
+            # buffered chunk (repair_rows re-appends at the tail) is the
+            # row's only durable copy: flush inside this lock window
+            # before physically dropping it, or a crash before the next
+            # flush loses the row outright — its WAL frame was already
+            # truncated by the checkpoint that made THIS version durable
+            if bool((~live & (pos >= self._flushed_rows_locked())).any()):
+                self._flush_locked()
             m = int(live.sum())
             if m == n:
                 self._seg_dead[si] = 0
@@ -641,6 +681,26 @@ class StoragePartition:
                         seg, self.zone_map_cols)
                     self._write_manifest_locked()
                 return 0
+            if m == 0:
+                # zero survivors: remove the segment entry outright (same
+                # as a zero-survivor merge run).  Writing a 0-row segment
+                # instead would wedge repair: lineage_units() would report
+                # a permanently-stale empty unit that read_rows() cannot
+                # return, so the unit never converges
+                self._index.shift_from(lo + n, -n)
+                del self._seg_files[si]
+                del self._seg_rows[si]
+                del self._seg_lineage[si]
+                del self._seg_zmaps[si]
+                del self._seg_dead[si]
+                del self._seg_level[si]
+                self._rows_total -= n
+                self._epoch += 1
+                self._write_manifest_locked()
+                self._garbage.append(path)
+                if self._pins == 0:
+                    self._gc_locked()
+                return n
             kept = {k: v[live] for k, v in seg.items()}
             fname = f"seg{self._seg_seq:06d}.npz"
             self._seg_seq += 1
@@ -671,6 +731,109 @@ class StoragePartition:
             if self._pins == 0:
                 self._gc_locked()
             return n - m
+
+    def merge_segments(self, si: int, count: int) -> Tuple[int, int]:
+        """Merge ``count`` adjacent flushed segments [si, si+count) into
+        ONE segment at level ``max(input levels) + 1``: drop dead row
+        versions, re-sort the union on ``sort_key`` (clustered layout
+        deepens as data ages — the INGESTBASE argument for ingestion-time
+        layout), rebuild zone maps **unconditionally** (legacy format-2
+        segments regain pruning here), and min-merge lineage (oldest
+        wins, conservative for staleness).  Returns ``(rows_merged,
+        rows_dropped)``.
+
+        Concurrency contract mirrors ``compact_segment``: decide +
+        rewrite + swap in one lock window; the layout epoch ALWAYS bumps
+        (cross-segment re-sort renumbers positions even with zero dead
+        rows), so in-flight conditional repairs are rejected wholesale
+        and simply re-scan; the replaced files outlive any snapshot pin
+        and the manifest commits before they are queued for GC."""
+        # feedlint: allow[blocking-under-lock] deliberate, same shape as
+        # compact_segment: the merge must be atomic w.r.t. renumbering;
+        # the caller (compaction.py) budgets the stall
+        with self._lock:
+            if count < 2 or si < 0 or si + count > len(self._seg_files):
+                raise IndexError(
+                    f"merge [{si}, {si + count}) out of range "
+                    f"({len(self._seg_files)} segments)")
+            paths = [self._seg_path(f)
+                     for f in self._seg_files[si:si + count]]
+            parts: List[Dict[str, np.ndarray]] = []
+            for p in paths:
+                with np.load(p) as f:
+                    parts.append({k: f[k] for k in f.files})
+            keys = set(parts[0])
+            for part in parts[1:]:
+                keys &= set(part)
+            merged = {k: np.concatenate([p[k] for p in parts])
+                      for k in keys}
+            n = int(merged["id"].shape[0])
+            lo = int(sum(self._seg_rows[:si]))
+            pos = self._index.lookup(merged["id"])
+            live = pos == np.arange(lo, lo + n)
+            # same hazard as compact_segment: never drop a superseded
+            # durable version while its successor is still buffered —
+            # flush first (position-preserving, so ``lo``/``live`` and
+            # the [si, si+count) window stay valid; the new segments
+            # land after it and are untouched by the splice below)
+            if bool((~live & (pos >= self._flushed_rows_locked())).any()):
+                self._flush_locked()
+            m = int(live.sum())
+            dropped = n - m
+            level = max(self._seg_level[si:si + count]) + 1
+            lin = merge_lineage(
+                [dict(x) for x in self._seg_lineage[si:si + count]])
+            if m == 0:
+                # nothing lives: the merged segment would be empty — drop
+                # the inputs outright instead of writing a 0-row file
+                self._index.shift_from(lo + n, -n)
+                del self._seg_files[si:si + count]
+                del self._seg_rows[si:si + count]
+                del self._seg_lineage[si:si + count]
+                del self._seg_zmaps[si:si + count]
+                del self._seg_dead[si:si + count]
+                del self._seg_level[si:si + count]
+            else:
+                kept = {k: v[live] for k, v in merged.items()}
+                # destination offset of each surviving input row: compact
+                # to [0, m), then permute by the sort order
+                dest = np.arange(m)
+                if self.sort_key is not None and self.sort_key in kept:
+                    order = np.argsort(kept[self.sort_key], kind="stable")
+                    if not np.array_equal(order, np.arange(m)):
+                        kept = {k: v[order] for k, v in kept.items()}
+                        inv = np.empty(m, np.int64)
+                        inv[order] = np.arange(m)
+                        dest = inv
+                fname = f"seg{self._seg_seq:06d}.npz"
+                self._seg_seq += 1
+                new_path = self._seg_path(fname)
+                tmp = new_path + ".tmp"
+                with open(tmp, "wb") as f:
+                    np.savez_compressed(f, **kept)
+                    f.flush()
+                    os.fsync(f.fileno())    # durable BEFORE the manifest
+                os.replace(tmp, new_path)
+                new_abs = np.full(n, -1, np.int64)
+                new_abs[live] = lo + dest
+                self._index.remap_span(lo, lo + n, new_abs)
+                self._index.shift_from(lo + n, -dropped)
+                self._seg_files[si:si + count] = [fname]
+                self._seg_rows[si:si + count] = [m]
+                self._seg_lineage[si:si + count] = [lin]
+                self._seg_zmaps[si:si + count] = [
+                    compute_zone_map(kept, self.zone_map_cols)]
+                self._seg_dead[si:si + count] = [0]
+                self._seg_level[si:si + count] = [level]
+            self._rows_total -= dropped
+            self._epoch += 1
+            # manifest BEFORE dropping the old files: a crash in between
+            # must never leave the manifest citing a deleted segment
+            self._write_manifest_locked()
+            self._garbage.extend(paths)
+            if self._pins == 0:
+                self._gc_locked()
+            return n, dropped
 
     def compact_chunks(self) -> int:
         """Drop superseded/deleted row versions from the buffered
@@ -709,7 +872,9 @@ class StoragePartition:
         dropped.  Synchronous; the background job budgets the same
         primitives instead."""
         dropped = 0
-        for si, rows, dead in self.garbage_units():
+        # reversed: an all-dead segment is deleted outright, shifting
+        # later indices — walking high-to-low keeps pending ones valid
+        for si, rows, dead in reversed(self.garbage_units()):
             if rows == 0 or dead == 0 or dead / rows < min_dead_frac:
                 continue
             dropped += (self.compact_chunks() if si is None
@@ -726,7 +891,11 @@ class StoragePartition:
             units: List[Tuple[int, int, Lineage]] = []
             cum = 0
             for r, lin in zip(self._seg_rows, self._seg_lineage):
-                units.append((cum, r, dict(lin)))
+                # skip 0-row segments (possible in legacy manifests):
+                # an empty unit can never be read back, so surfacing it
+                # would hand the repair scheduler unconvergeable work
+                if r:
+                    units.append((cum, r, dict(lin)))
                 cum += r
             for c, lin in zip(self._chunks, self._chunk_lineage):
                 r = int(c["id"].shape[0])
@@ -983,6 +1152,21 @@ class StorageJob:
     @property
     def rows_total(self) -> int:
         return sum(p.rows_total for p in self.partitions)
+
+    @property
+    def segment_count(self) -> int:
+        """Flushed segments across all partitions (the per-unit scan
+        overhead the merge policy exists to shrink)."""
+        return sum(len(p.segment_stats()) for p in self.partitions)
+
+    def level_histogram(self) -> Dict[int, int]:
+        """``{level: segment count}`` across all partitions — level 0 is
+        fresh flushes, level k+1 holds merges of level-<=k segments."""
+        hist: Dict[int, int] = {}
+        for p in self.partitions:
+            for lv, c in p.level_histogram().items():
+                hist[lv] = hist.get(lv, 0) + c
+        return hist
 
     def scan(self):
         for p in self.partitions:

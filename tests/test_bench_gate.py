@@ -32,7 +32,8 @@ GOOD = {
     "fig_repair": {"currency_converged_mismatches": 0,
                    "currency_stale_rows": 0,
                    "interference_ratio": 0.97},
-    "fig_query": {"prune_speedup": 3.2, "live_query_p95_ms": 40.0},
+    "fig_query": {"prune_speedup": 3.2, "live_query_p95_ms": 40.0,
+                  "batched_agg_speedup": 2.0, "merged_scan_speedup": 3.0},
     "fig25": {"bursty_elastic_vs_best_static": 1.1},
 }
 
@@ -55,7 +56,8 @@ def test_gate_fails_on_convergence_regression(tmp_path):
 
 def test_gate_fails_on_ratio_floor_and_latency_ceiling(tmp_path):
     f = bench_doc(tmp_path, "fig_query",
-                  {"prune_speedup": 0.2, "live_query_p95_ms": 99_999.0})
+                  dict(GOOD["fig_query"], prune_speedup=0.2,
+                       live_query_p95_ms=99_999.0))
     fails = check_file(f, "smoke")
     assert len(fails) == 2
 

@@ -222,6 +222,46 @@ def test_bucket_rows_power_of_two():
     assert dispatch.bucket_rows(900, minimum=420) == 1680
 
 
+def test_concat_rows_batches_units_in_scan_order():
+    """The batched-aggregation planner: empty slices drop, order is
+    preserved, a single part avoids the copy, and the hit is recorded
+    against the row bucket the dispatches will ride."""
+    parts = [
+        {"a": np.arange(3, dtype=np.int64), "b": np.arange(3.0)},
+        {"a": np.empty(0, np.int64), "b": np.empty(0)},
+        {"a": np.arange(3, 8, dtype=np.int64), "b": np.arange(3.0, 8.0)},
+    ]
+    cols, n = dispatch.concat_rows(parts)
+    assert n == 8
+    np.testing.assert_array_equal(cols["a"], np.arange(8))
+    np.testing.assert_array_equal(cols["b"], np.arange(8.0))
+    assert dispatch.concat_rows([]) == ({}, 0)
+    assert dispatch.concat_rows([{"a": np.empty(0, np.int64)}]) == ({}, 0)
+    one, n1 = dispatch.concat_rows([{"a": np.arange(4)}])
+    assert n1 == 4 and one["a"].tolist() == [0, 1, 2, 3]
+
+
+def test_path_tape_records_dispatch_routes():
+    """Satellite: the 64-bit XLA fallback is explicit in stats — a
+    thread-local tape splits kernel vs fallback dispatches per query."""
+    vals = jnp.asarray(np.array([2 ** 40, 1], np.int64))
+    seg = jnp.asarray(np.array([0, 1], np.int32))
+    dispatch.path_tape_start()
+    dispatch.segment_sum(vals, seg, 2)
+    tape = dispatch.path_tape_stop()
+    assert tape == {("segment_sum", "xla_64bit"): 1}
+    # the tape is cleared on stop, and the global counters saw it too
+    dispatch.path_tape_start()
+    assert dispatch.path_tape_stop() == {}
+    assert dispatch.path_stats().get(("segment_sum", "xla_64bit"), 0) >= 1
+    # int32 off the kernel envelope routes "reference", never "xla_64bit"
+    dispatch.path_tape_start()
+    with dispatch_mode("reference"):
+        dispatch.segment_sum(vals.astype(jnp.int32), seg, 2)
+    tape = dispatch.path_tape_stop()
+    assert tape == {("segment_sum", "reference"): 1}
+
+
 def test_nearby_sizes_share_a_compiled_bucket():
     rng = np.random.default_rng(17)
     keys = jnp.asarray(_sorted_keys(rng, 500, 1000))

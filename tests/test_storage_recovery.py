@@ -259,9 +259,8 @@ def test_compaction_recover_round_trip_and_dead_recount(tmp_path):
     assert again.count == 10 and again.dead_rows == 0
     pk = int(b["id"][4])
     assert int(again.get(pk)["country"]) == int(b["country"][4]) + 7
-    # the emptied segment keeps its (conservative) lineage
-    assert [lin for _, _, lin in again.lineage_units()] == \
-        [{"t": 1}, {"t": 2}]
+    # the fully-dead segment is gone, not kept as a 0-row unit
+    assert [lin for _, _, lin in again.lineage_units()] == [{"t": 2}]
 
 
 def test_delete_rows_conditional_and_epoch_fencing():
@@ -406,6 +405,309 @@ def test_durable_wal_storage_round_trip(tmp_path):
     assert fresh.count == 120
     assert sum(batch_rows(p.read_rows(0, p.count))
                for p in fresh.partitions if p.count) == 120
+
+
+# ---------------------------------------------------------------------------
+# leveled segment merging (tentpole: merge_segments + manifest format 3)
+# ---------------------------------------------------------------------------
+
+def test_merge_segments_levels_lineage_sort_and_renumbering(tmp_path):
+    """K adjacent small segments merge into ONE at max(level)+1: dead
+    versions drop, the union re-sorts on sort_key, lineage min-merges,
+    and every surviving pk still resolves through the renumbered index."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10,
+                         sort_key="country")
+    batches = [batch_of(10, seed=s, start_id=s * 1000)
+               for s in range(1, 5)]
+    for t, b in enumerate(batches, start=1):
+        p.insert(b, upsert=True, lineage={"t": t})     # -> 4 segments
+    churn = {k: v.copy() for k, v in batches[1].items()}
+    churn["country"] = churn["country"] + 100
+    p.insert(churn, upsert=True, lineage={"t": 5})     # seg 1 fully dead
+    p.flush()
+    assert p.dead_rows == 10 and len(p.segment_stats()) == 5
+    epoch = p.epoch
+
+    n, dropped = p.merge_segments(0, 4)
+    assert (n, dropped) == (40, 10)
+    assert p.epoch > epoch                 # merges ALWAYS bump the epoch
+    stats = p.segment_stats()
+    assert stats == [(30, 0, 1), (10, 0, 0)]
+    assert p.level_histogram() == {0: 1, 1: 1}
+    assert p.count == 40 and p.rows_total == 40 and p.dead_rows == 0
+    with p._lock:
+        assert p._seg_lineage[0] == {"t": 1}           # oldest wins
+    # the merged segment is clustered on the sort key
+    snap = p.snapshot_view()
+    try:
+        cols = snap.units[0].read(("id", "country"))
+        assert cols["id"].shape[0] == 30
+        assert (np.diff(cols["country"]) >= 0).all()
+        assert snap.live_mask(cols["id"], 0).all()
+    finally:
+        snap.release()
+    # point reads: untouched batches keep originals, churned one the upsert
+    for b in (batches[0], batches[2], batches[3]):
+        for i in range(0, 10, 3):
+            assert int(p.get(int(b["id"][i]))["country"]) == \
+                int(b["country"][i])
+    for i in range(0, 10, 3):
+        assert int(p.get(int(batches[1]["id"][i]))["country"]) == \
+            int(batches[1]["country"][i]) + 100
+
+
+def test_merge_manifest_format3_round_trip(tmp_path):
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    for s in range(1, 5):
+        p.insert(batch_of(10, seed=s, start_id=s * 1000), upsert=False,
+                 lineage={"t": s})
+    p.merge_segments(0, 3)
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    with open(man) as f:
+        doc = json.load(f)
+    assert doc["format"] == 3
+    assert doc["levels"] == [1, 0]
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert fresh.segment_stats() == p.segment_stats()
+    assert fresh.level_histogram() == {0: 1, 1: 1}
+    assert fresh.count == 40
+    # and the recovered layout merges again, deepening the level
+    fresh.merge_segments(0, 2)
+    assert fresh.segment_stats() == [(40, 0, 2)]
+
+
+def test_format2_manifest_recovers_as_level0(tmp_path):
+    """Pre-level manifests (format 2: lineage + zone maps, no levels)
+    recover every segment at level 0 — merge-eligible, never rejected."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    for s in range(1, 4):
+        p.insert(batch_of(10, seed=s, start_id=s * 1000), upsert=False,
+                 lineage={"t": s})
+    p.merge_segments(0, 2)                             # a level-1 segment
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    with open(man) as f:
+        doc = json.load(f)
+    del doc["levels"]
+    doc["format"] = 2
+    with open(man, "w") as f:
+        json.dump(doc, f)
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert fresh.count == 30
+    assert [lv for _r, _d, lv in fresh.segment_stats()] == [0, 0]
+    assert fresh.level_histogram() == {0: 2}
+
+
+def test_merge_rebuilds_zone_maps_from_legacy_manifest(tmp_path):
+    """Satellite regression: segments recovered from a zone-map-less
+    (format-1-era) manifest are never pruned — but merging them rebuilds
+    zone maps unconditionally, so aged legacy data regains pruning."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b1 = batch_of(10, seed=51)
+    b2 = batch_of(10, seed=52, start_id=1000)
+    p.insert(b1, upsert=False, lineage={"t": 1})
+    p.insert(b2, upsert=False, lineage={"t": 2})
+    man = os.path.join(str(tmp_path), "p0", "MANIFEST.json")
+    with open(man) as f:
+        doc = json.load(f)
+    del doc["zone_maps"]
+    del doc["lineage"]
+    with open(man, "w") as f:
+        json.dump(doc, f)
+    legacy = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    with legacy._lock:
+        assert legacy._seg_zmaps == [{}, {}]           # unprunable
+    legacy.merge_segments(0, 2)
+    snap = legacy.snapshot_view()
+    try:
+        zm = snap.units[0].zone_map
+        assert zm and zm["id"] == (
+            int(min(b1["id"].min(), b2["id"].min())),
+            int(max(b1["id"].max(), b2["id"].max())))
+    finally:
+        snap.release()
+
+
+def test_pinned_snapshot_survives_live_merge(tmp_path):
+    """Snapshot isolation across a merge: the replaced segment files stay
+    on disk (and readable) while any pin is held, and are GC'd only after
+    the last release."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    batches = [batch_of(10, seed=s, start_id=s * 1000)
+               for s in range(61, 64)]
+    for b in batches:
+        p.insert(b, upsert=False, lineage={"t": 1})
+    snap = p.snapshot_view()
+    old_paths = [u.path for u in snap.units]
+    assert len(old_paths) == 3 and all(old_paths)
+
+    n, dropped = p.merge_segments(0, 3)
+    assert (n, dropped) == (30, 0)                     # pure reshaping
+    for path in old_paths:                             # pinned: not GC'd
+        assert os.path.exists(path)
+    seen = []
+    for u in snap.units:                               # still readable
+        cols = u.read(("id",))
+        assert snap.live_mask(cols["id"], u.base).all()
+        seen.extend(int(x) for x in cols["id"])
+    assert sorted(seen) == sorted(
+        int(x) for b in batches for x in b["id"])
+    snap.release()
+    for path in old_paths:                             # unpinned: gone
+        assert not os.path.exists(path)
+    fresh = p.snapshot_view()
+    try:
+        assert [u.rows for u in fresh.units] == [30]
+    finally:
+        fresh.release()
+
+
+def test_merge_fully_dead_run_drops_segments(tmp_path):
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b1 = batch_of(10, seed=71)
+    b2 = batch_of(10, seed=72, start_id=1000)
+    p.insert(b1, upsert=True, lineage={"t": 1})
+    p.insert(b2, upsert=True, lineage={"t": 2})
+    for b in (b1, b2):                       # supersede everything
+        again = {k: v.copy() for k, v in b.items()}
+        again["country"] = again["country"] + 9
+        p.insert(again, upsert=True, lineage={"t": 3})
+    p.flush()
+    assert p.dead_rows == 20
+    n, dropped = p.merge_segments(0, 2)
+    assert (n, dropped) == (20, 20)          # no empty segment written
+    assert [lv for _r, _d, lv in p.segment_stats()] == [0, 0]
+    assert p.count == 20 and p.dead_rows == 0
+    fresh = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert fresh.count == 20
+    assert int(fresh.get(int(b1["id"][2]))["country"]) == \
+        int(b1["country"][2]) + 9
+
+
+def test_merge_epoch_fences_stale_conditional_writes(tmp_path):
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b = batch_of(20, seed=81)
+    p.insert({k: v[:10] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})
+    p.insert({k: v[10:] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})                         # -> 2 segments
+    epoch = p.epoch
+    p.merge_segments(0, 2)
+    # conditional writes captured before the merge renumbered: rejected
+    fixed = {k: v[:3].copy() for k, v in b.items()}
+    assert p.repair_rows(fixed, np.arange(3), {"t": 2},
+                         expect_epoch=epoch) == 0
+    assert p.delete_rows(b["id"][:3], np.arange(3),
+                         expect_epoch=epoch) == 0
+    assert not p.update_lineage(0, 20, {"t": 2}, expect_epoch=epoch)
+    assert p.count == 20
+
+
+def test_merge_flushes_buffered_supersessions_before_dropping(tmp_path):
+    """repair_rows re-appends the repaired version at the tail — into a
+    BUFFERED chunk.  A merge must not physically drop the superseded
+    (flushed, durable) version while its successor is still volatile:
+    flush-then-drop, or a crash right after the merge loses the row
+    (its WAL frame is long truncated).  Pinned by recover()ing from the
+    post-merge on-disk state, which is exactly what a crash would see."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b = batch_of(20, seed=91)
+    p.insert({k: v[:10] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})
+    p.insert({k: v[10:] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})                         # -> 2 segments
+    # repair 3 rows of segment 0: newer versions land in a buffered
+    # chunk (under the flush threshold), their flushed originals go dead
+    fixed = {k: v[:3].copy() for k, v in b.items()}
+    fixed["country"] = fixed["country"] + 7
+    assert p.repair_rows(fixed, np.arange(3), {"t": 2},
+                         expect_epoch=p.epoch) == 3
+    assert p._rows_buffered == 3
+    rows, dropped = p.merge_segments(0, 2)
+    assert dropped == 3                  # the superseded originals
+    assert p._rows_buffered == 0         # chunk flushed INSIDE the merge
+    # crash now: a fresh partition over the same dir must see every row,
+    # with the repaired values (the successor was made durable first)
+    r = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert r.count == 20
+    for i in range(3):
+        assert int(r.get(int(b["id"][i]))["country"]) == \
+            int(b["country"][i]) + 7
+
+
+def test_fully_dead_segment_is_deleted_not_left_empty(tmp_path):
+    """A segment whose every row is superseded must be REMOVED by
+    compaction, not rewritten as a 0-row segment: an empty unit would
+    surface from lineage_units() as permanently-stale work that
+    read_rows() can never return, wedging repair convergence."""
+    p = StoragePartition(0, spill_dir=str(tmp_path), segment_rows=10)
+    b = batch_of(20, seed=17)
+    p.insert({k: v[:10] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})
+    p.insert({k: v[10:] for k, v in b.items()}, upsert=True,
+             lineage={"t": 1})
+    # supersede EVERY row of segment 0; the new versions fill a third
+    # segment, so segment 0 is 100% dead and flushed-durable everywhere
+    p.insert({k: v[:10] for k, v in b.items()}, upsert=True,
+             lineage={"t": 2})
+    assert len(p._seg_rows) == 3 and p._seg_dead[0] == 10
+    assert p.compact() == 10
+    assert p._seg_rows == [10, 10]       # entry deleted, not emptied
+    assert all(r > 0 for _, r, _ in p.lineage_units())
+    assert p.count == 20
+    r = StoragePartition(0, spill_dir=str(tmp_path)).recover()
+    assert r.count == 20 and r._seg_rows == [10, 10]
+
+
+def test_merge_segments_rejects_bad_ranges():
+    p = StoragePartition(0)
+    with pytest.raises(IndexError):
+        p.merge_segments(0, 2)                         # nothing flushed
+    with pytest.raises(IndexError):
+        p.merge_segments(0, 1)                         # count < 2
+
+
+def test_find_merge_run_policy():
+    from repro.core.compaction import find_merge_run
+    seg = lambda rows, level=0: (rows, 0, level)       # noqa: E731
+    # disabled / nothing small enough
+    assert find_merge_run([seg(5)] * 8, 4, 0) is None
+    assert find_merge_run([seg(100)] * 8, 4, 50) is None
+    # a run of exactly fanin merges; longer runs cap at fanin inputs
+    assert find_merge_run([seg(5)] * 4, 4, 50) == (0, 4, 20)
+    assert find_merge_run([seg(5)] * 7, 4, 50) == (0, 4, 20)
+    # graduated segments break runs; a too-short run is skipped whole
+    stats = [seg(5), seg(5), seg(100, 1), seg(5), seg(5), seg(5)]
+    assert find_merge_run(stats, 3, 50) == (3, 3, 15)
+    # min_run relaxes the trigger but never below 2 inputs
+    assert find_merge_run([seg(5), seg(5)], 4, 50, min_run=2) == (0, 2, 10)
+    assert find_merge_run([seg(5)], 4, 50, min_run=1) is None
+    assert find_merge_run([seg(100), seg(5)], 4, 50, min_run=1) is None
+
+
+def test_compaction_job_schedules_merges(tmp_path):
+    from repro.core import CompactionJob, CompactionSpec
+    sj = StorageJob(1, spill_dir=str(tmp_path), segment_rows=10)
+    for s in range(8):
+        sj.write(batch_of(10, seed=s + 1, start_id=s * 1000))
+    sj.flush()
+    assert sj.segment_count == 8
+    # level_target_rows=0 (default): merge_now is a no-op
+    off = CompactionJob(sj, CompactionSpec())
+    assert off.merge_now() == 0
+    assert sj.segment_count == 8
+    job = CompactionJob(sj, CompactionSpec(merge_fanin=4,
+                                           level_target_rows=35))
+    job.step(force=True)
+    # two fanin-sized merges; the level-1 outputs (40 rows) graduated
+    assert sj.segment_count == 2
+    assert sj.level_histogram() == {1: 2}
+    assert job.stats.merges == 2
+    assert job.stats.segments_merged == 8
+    assert job.stats.rows_merged == 80
+    assert job.stats.rows_rewritten == 80              # nothing dead
+    job.step(force=True)                               # converged
+    assert job.stats.merges == 2
+    assert sj.count == 80
 
 
 # ---------------------------------------------------------------------------
