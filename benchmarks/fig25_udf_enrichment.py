@@ -301,6 +301,46 @@ def bench_backlog_coalescing(mgr, total: int, batch: int = BATCH_1X
              f"coalesced_frames={s.coalesced_frames}")
 
 
+def bench_obs_overhead(mgr, total: int, batch: int = BATCH_1X) -> None:
+    """Observability overhead gate: the SAME replayed stream through an
+    untraced feed (metrics registry only — always on) and a traced one
+    (``options(trace=...)``: span stamping at every hop, per-thread
+    rings).  Interleaved rounds with per-side medians (the fig_repair
+    interference pattern, so drift hits both sides equally); the
+    regression gate holds traced/untraced to >= 0.97."""
+    n = max(total, 12_000)
+    n -= n % batch
+    frames = list(SyntheticTweets(seed=41).batches(n, batch))
+
+    def run(label, rnd, trace):
+        opts = dict(num_partitions=2, coalesce_rows=0, holder_capacity=32)
+        if trace:
+            opts["trace"] = {"capacity": 4096}
+        p = (pipeline(ReplayAdapter(frames), f"f25-obs-{label}-{rnd}")
+             .parse(batch_size=batch)
+             .options(**opts)
+             .enrich(Q.Q1).store())
+        s = mgr.submit(p).join(timeout=1200)
+        assert s.stored == n, (s.stored, n)
+        return s.records_per_s
+
+    run("off", "warm", False)        # warm the predeploy cache once
+    run("on", "warm", True)
+    off, on = [], []
+    for rnd in range(5):
+        off.append(run("off", rnd, False))
+        on.append(run("on", rnd, True))
+    m_off = sorted(off)[len(off) // 2]
+    m_on = sorted(on)[len(on) // 2]
+    emit(FIG, "obs_off", m_off, "rec/s",
+         f"median of {len(off)} interleaved rounds x{n} rows, "
+         "metrics only")
+    emit(FIG, "obs_on", m_on, "rec/s",
+         "same replayed stream, trace spans enabled")
+    emit(FIG, "obs_overhead_ratio", m_on / m_off, "ratio",
+         "acceptance: >= 0.97 (tracing must stay ~free)")
+
+
 def main(total: int = 8_000, dispatch: str = "auto",
          probe_rows: int = 1_000_000, plan: str = "chained",
          elastic: bool = False) -> None:
@@ -368,6 +408,9 @@ def main(total: int = 8_000, dispatch: str = "auto",
         bench_backlog_coalescing(mgr, total)
     if elastic:
         bench_elastic(mgr)
+    # unconditional: the obs on/off ratio gates EVERY profile (smoke
+    # included) — observability that taxes the hot path is a regression
+    bench_obs_overhead(mgr, total)
 
 
 if __name__ == "__main__":

@@ -138,6 +138,24 @@ def bench_currency(mgr, nbase: int, total: int, batch: int,
          f"repaired={s.repaired_rows} refined={r.refined_rows} "
          f"superseded={r.superseded_rows} yields={r.yields} "
          f"invocations={r.repair_invocations}")
+    # the SAME currency numbers through the unified metrics registry:
+    # RepairStats.add_lag dual-writes its sample ring and the native
+    # repair_currency_s histogram, so the registry percentiles must
+    # agree with the stats-computed ones (within 10% — both retain the
+    # newest ~4K samples, but halve at different ring positions)
+    m = h.metrics()
+    cur = m["repair_currency_s"]
+    emit(FIG, "currency_registry_lag_p50", cur.percentile(0.5), "s",
+         f"handle.metrics()['repair_currency_s'], {cur.count} samples")
+    emit(FIG, "currency_registry_lag_p95", cur.percentile(0.95), "s",
+         "native histogram percentile (exposition-ready)")
+    for q, stat in ((0.5, s.repair_lag_p50_s), (0.95, s.repair_lag_p95_s)):
+        reg_v = cur.percentile(q)
+        if stat > 1e-9:
+            assert abs(reg_v - stat) <= 0.1 * stat, (q, reg_v, stat)
+    lat = m["ingest_visible_latency_s"]
+    emit(FIG, "currency_visible_latency_p95", lat.percentile(0.95), "s",
+         f"intake stamp -> store-queryable, {lat.count} batches")
     mismatches = check_convergence(mgr, h.storage)
     emit(FIG, "currency_converged_mismatches", mismatches, "rows",
          "stored vs from-scratch enrichment under the final snapshot "

@@ -65,6 +65,9 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
             # the controller must reach a usable fraction of the best
             # static allocation even on a noisy shared core
             ("bursty_elastic_vs_best_static", ">=", 0.3),
+            # tracing on vs off: interleaved-median ratio, same floor at
+            # every scale — observability must stay ~free
+            ("obs_overhead_ratio", ">=", 0.97),
         ],
         "fig_recovery": [
             # exactly-once across SIGKILL/restart is scale-independent
@@ -94,6 +97,7 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
         ],
         "fig25": [
             ("bursty_elastic_vs_best_static", ">=", 0.9),
+            ("obs_overhead_ratio", ">=", 0.97),
         ],
         "fig_recovery": [
             ("rows_lost_total", "==", 0),

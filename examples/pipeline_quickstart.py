@@ -221,3 +221,36 @@ try:
           f"64bit={post.stats.agg_64bit_fallbacks})")
 finally:
     shutil.rmtree(work, ignore_errors=True)
+
+# 7. observability (core/obs, docs/OBSERVABILITY.md): metrics are always
+#    on — `metrics()` is a live snapshot of every feed number, uniformly
+#    named, and `metrics_text()` the Prometheus exposition.  Tracing is
+#    opt-in per plan: `.options(trace=...)` stamps every batch with span
+#    ids that ride intake -> worker -> store like WAL seqs, so one
+#    batch's journey reconstructs from `drain_trace()`.
+obs_plan = (pipeline(SyntheticAdapter(total=5_000, frame_size=420, seed=4),
+                     "ObsDemo")
+            .parse(batch_size=420)
+            .options(num_partitions=1, trace=True)
+            .enrich(Q.Q1)
+            .store())
+feed4 = mgr.submit(obs_plan)
+feed4.join()
+m = feed4.metrics()
+lat = m["ingest_visible_latency_s"]
+print(f"\nobs: stored={m['feed_stored']} "
+      f"visible-latency p50/p95="
+      f"{lat.percentile(0.5) * 1e3:.1f}/{lat.percentile(0.95) * 1e3:.1f}ms "
+      f"({lat.count} batches) backlog_p95={m['feed_backlog_p95_rows']:.0f}")
+excerpt = [ln for ln in feed4.metrics_text().splitlines()
+           if ln.startswith(("feed_stored ", "ingest_visible_latency_s_c",
+                             "store_rows "))]
+print("obs: exposition excerpt:", "; ".join(excerpt))
+spans = feed4.drain_trace()
+names = sorted({s["name"] for s in spans})
+sid = next(i for s in spans if s["name"] == "intake.draw"
+           for i in s["spans"])
+journey = [s["name"] for s in spans if sid in s["spans"]]
+print(f"obs: {len(spans)} spans, taxonomy={names}")
+print(f"obs: span {sid} journey: {' -> '.join(journey)}")
+assert {"intake.draw", "store.append"} <= set(journey)

@@ -58,6 +58,8 @@ RULES: Dict[str, str] = {
     "blocking-under-lock": "R3 no JIT/file-I/O/sleep/queue-put under a lock",
     "epoch-fence": "R4 conditional storage writes pass expect_epoch",
     "listener-under-lock": "R5 listener callbacks fire outside locks",
+    "obs-under-lock": "R6 no histogram observe / span emit under a "
+                      "core lock (blocking-ok step locks exempt)",
 }
 
 #: Canonical allowed nested acquisitions, ``(outer, inner)`` by global
@@ -95,6 +97,19 @@ LOCK_ORDER: List[Tuple[str, str]] = [
     ("checkpoint-step", "repair-events"),
     ("checkpoint-step", "ref-table"),
     ("checkpoint-step", "ref-build"),
+    # Observability (core/obs): the blocking-ok step locks may observe
+    # histograms (tiny per-instrument 'metrics' lock) and emit spans
+    # (whose first-emit-per-thread registration takes 'trace-rings');
+    # hot-path emit sites run outside strict locks (rule R6), so these
+    # are the only declared inward edges.
+    ("repair-step", "metrics"),
+    ("repair-step", "trace-rings"),
+    ("compaction-step", "metrics"),
+    ("compaction-step", "trace-rings"),
+    ("checkpoint-step", "metrics"),
+    ("checkpoint-step", "trace-rings"),
+    # No ("wal", "metrics") edge on purpose: IntakeLog times fsyncs
+    # under the wal lock but observes the histogram only after release.
 ]
 
 

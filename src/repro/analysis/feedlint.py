@@ -1,6 +1,6 @@
 """feedlint — AST-based concurrency-invariant analyzer for the core.
 
-Five rules, all driven by the comment annotations documented in
+Six rules, all driven by the comment annotations documented in
 repro.analysis.annotations and docs/CONCURRENCY.md:
 
 R1 guarded-field       fields declared ``# guarded-by: <lock>`` (or
@@ -22,6 +22,10 @@ R5 listener-under-lock subscriber callbacks (``# fires-listeners``
                        methods, or callables iterated from a
                        ``# listener-registry`` field) never run under a
                        held lock.
+R6 obs-under-lock      telemetry publication — histogram ``.observe()``
+                       and span ``.emit()`` — never runs under a strict
+                       (non-``blocking-ok``) lock; counters and gauges
+                       are lock-free and stay legal anywhere.
 
 The analyzer is pure stdlib ``ast`` + ``tokenize``: it never imports the
 code it scans.  Exit status 0 means a clean tree.
@@ -673,6 +677,19 @@ class Linter:
                 if block:
                     report("blocking-under-lock", node.lineno,
                            f"{block} under lock '{strict_held[-1]}'")
+                # R6 — telemetry publication under a strict lock: histogram
+                # .observe() takes the per-instrument 'metrics' lock and
+                # span .emit() can take 'trace-rings' on a thread's first
+                # emit; both must run after release (counter .inc() /
+                # gauge .set() are lock-free and stay legal anywhere).
+                # blocking-ok step locks are exempt (their inward edges to
+                # 'metrics'/'trace-rings' are declared in annotations.py).
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in ("observe", "emit")):
+                    report("obs-under-lock", node.lineno,
+                           f".{node.func.attr}() publishes telemetry under "
+                           f"lock '{strict_held[-1]}'; record under the "
+                           "lock, observe/emit after release")
             if held:
                 # R5 — listener callbacks under any lock
                 if (isinstance(node.func, ast.Name)

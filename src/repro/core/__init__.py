@@ -43,6 +43,14 @@ from repro.core.intake import (  # noqa: F401
     SyntheticAdapter,
     TrackedFrame,
 )
+from repro.core.obs import (  # noqa: F401
+    FeedObs,
+    HistogramSnapshot,
+    MetricsRegistry,
+    MetricValue,
+    Tracer,
+    TraceSpec,
+)
 from repro.core.partition_holder import (  # noqa: F401
     STOP,
     ActivePartitionHolder,

@@ -142,6 +142,7 @@ class CompactionJob(threading.Thread):
         self.spec = spec
         self.batch_size = batch_size
         self.handle = handle      # duck-typed FeedHandle (None in tests)
+        self._obs = getattr(handle, "obs", None)
         self.stats = CompactionStats()
         self.error: Optional[BaseException] = None
         # serializes step(); dedicated background lock — the segment
@@ -230,10 +231,19 @@ class CompactionJob(threading.Thread):
                 si, count, run_rows = run
                 if not force:
                     self._tokens -= run_rows   # merges rewrite every row
+                t_m = time.perf_counter()
                 try:
                     n, got = part.merge_segments(si, count)
                 except IndexError:
                     break    # layout moved since segment_stats(); retry
+                if self._obs is not None and self._obs.tracing:
+                    # under the compaction-step lock only (blocking-ok:
+                    # R6-exempt, edge declared in analysis/annotations.py)
+                    self._obs.emit("compact.merge", (),
+                                   t0=time.monotonic(),
+                                   dur=time.perf_counter() - t_m,
+                                   rows=n, dropped=got, inputs=count,
+                                   partition=part.pid)
                 self.stats.merges += 1
                 self.stats.segments_merged += count
                 self.stats.rows_merged += n

@@ -44,9 +44,12 @@ class StageStats:
     """Per-stage observability for fused (chained) UDFs: how often each
     stage's intermediate state was rebuilt vs reused and what it cost.
     Inside a multi-stage fused executable apply time cannot be attributed
-    per stage — the whole chain is ONE dispatch by design — so ``apply_s``
-    is populated only when the executable holds a single stage, which is
-    exactly the per-stage-split case the elasticity controller samples."""
+    exactly per stage — the whole chain is ONE dispatch by design — so
+    ``apply_s`` is the batch's apply wall split EVENLY across the fused
+    stages (a documented approximation; exact when the executable holds a
+    single stage, which is the per-stage-split case the elasticity
+    controller samples).  Exact *group*-level walls come from the
+    tracer's ``apply.<group>`` spans (core/obs, docs/OBSERVABILITY.md)."""
     invocations: int = 0
     records: int = 0
     state_builds: int = 0
@@ -253,6 +256,7 @@ class ComputingRunner:
         versions = tuple(s.version for s in snaps.values())
         self.last_versions = dict(zip(snaps.keys(), versions))
         refs = self._refs_to_device(snaps)
+        apply_before = self.stats.apply_s
 
         t0 = time.perf_counter()
         dev_batch = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -278,13 +282,15 @@ class ComputingRunner:
         self.stats.invocations += 1
         self.stats.records += nvalid
         stages = udf.stages or (udf,)
+        # per-stage wall attribution: a fused chain is ONE dispatch, so
+        # this batch's apply wall is split evenly across its stages (exact
+        # for a single-stage executable; see the StageStats docstring)
+        share = (self.stats.apply_s - apply_before) / len(stages)
         for st in stages:
             ss = self.stats.stage(st.name)
             ss.invocations += 1
             ss.records += nvalid
-        if len(stages) == 1:
-            # single-stage executable: the whole apply IS this stage
-            self.stats.stage(stages[0].name).apply_s = self.stats.apply_s
+            ss.apply_s += share
         return out
 
     def _run_per_record(self, dev_batch, refs, versions):

@@ -196,6 +196,7 @@ class IntakeLog:
         self._last_offset: Optional[int] = None  # guarded-by: _lock
         self._last_sync = 0.0          # guarded-by: _lock
         self.appended = 0              # single-writer stat
+        self._fsync_hist = None        # obs histogram (set post-init)
         self._flush_stop = threading.Event()
         self._flusher: Optional[threading.Thread] = None
         segs = self._segments()
@@ -268,20 +269,31 @@ class IntakeLog:
                     fd = os.dup(self._f.fileno())
                 except OSError:
                     continue
+            t0 = time.perf_counter()
             try:
                 os.fsync(fd)
             except OSError:
                 pass
             finally:
                 os.close(fd)
+            hist = self._fsync_hist
+            if hist is not None:      # outside the wal lock by design
+                hist.observe(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------ API
+    def set_fsync_histogram(self, hist) -> None:
+        """Route fsync latencies into an obs histogram (``wal_fsync_s``).
+        Called once at feed start, before concurrent appends; the
+        flusher/sync paths read the attribute without the lock."""
+        self._fsync_hist = hist
+
     def append_frame(self, offset: int, lines: List[bytes]) -> int:
         """Log one frame; returns its sequence number.  ``offset`` is
         the adapter's resume position *after* this frame.  (Named
         ``append_frame``, not ``append``, so feedlint's duck-typed call
         resolution never confuses it with ``list.append``.)"""
         payload = b"\n".join(lines)
+        fsync_dt = 0.0
         with self._lock:
             if self._f is None:
                 raise RuntimeError("intake log is closed")
@@ -293,21 +305,32 @@ class IntakeLog:
             self._f.write(_MAGIC + head + _CRC.pack(crc) + payload)
             self._f.flush()
             if self.fsync == "always":
+                t0 = time.perf_counter()
                 os.fsync(self._f.fileno())
+                fsync_dt = time.perf_counter() - t0
             self._last_seq = seq
             self._last_offset = int(offset)
             self.appended += 1
-            return seq
+        hist = self._fsync_hist
+        if fsync_dt and hist is not None:
+            hist.observe(fsync_dt)
+        return seq
 
     def sync(self) -> None:
         """fsync the active segment (checkpoints call this before
         recording a tail seq/offset, so the checkpoint never references
         a record the disk does not have)."""
+        t0 = time.perf_counter()
+        synced = False
         with self._lock:
             if self._f is not None:
                 self._f.flush()
                 os.fsync(self._f.fileno())
                 self._last_sync = time.monotonic()
+                synced = True
+        hist = self._fsync_hist
+        if synced and hist is not None:
+            hist.observe(time.perf_counter() - t0)
 
     def tail(self) -> Tuple[int, Optional[int]]:
         """(last logged seq, adapter offset after it).  Offset is None
@@ -582,6 +605,9 @@ class CheckpointJob(threading.Thread):
         self._last_w = rt.ledger.watermark()   # guarded-by: _step_lock
         self.checkpoints = 0    # single-writer stat
         self.last_error: Optional[BaseException] = None
+        self._obs = getattr(handle, "obs", None)
+        self._ckpt_hist = (self._obs.registry.histogram("checkpoint_s")
+                           if self._obs is not None else None)
 
     def run(self):
         while not self._stopped.is_set():
@@ -601,6 +627,7 @@ class CheckpointJob(threading.Thread):
             tail_seq, tail_off = led.tail()
             if w <= self._last_w and not force:
                 return False
+            t0 = time.perf_counter()
             self.rt.wal.sync()
             self.handle.storage.flush()
             self.rt.checkpoints.save(
@@ -608,6 +635,14 @@ class CheckpointJob(threading.Thread):
             self.rt.wal.truncate(w)
             self._last_w = w
             self.checkpoints += 1
+            dur = time.perf_counter() - t0
+            # under the checkpoint-step lock only (blocking-ok:
+            # R6-exempt, edge declared in analysis/annotations.py)
+            if self._ckpt_hist is not None:
+                self._ckpt_hist.observe(dur)
+            if self._obs is not None and self._obs.tracing:
+                self._obs.emit("checkpoint", (), t0=time.monotonic(),
+                               dur=dur, watermark=w)
             return True
 
     def _state(self, w: int, tail_seq: int, tail_off: int) -> Dict:

@@ -85,8 +85,11 @@ from repro.core.computing import ComputingRunner, ComputingSpec, \
     ComputingStats
 from repro.core.durability import DurabilityRuntime
 from repro.core.elasticity import ElasticityController, ElasticSpec
+from repro.core.enrich import dispatch
 from repro.core.enrich.queries import EnrichUDF
 from repro.core.intake import Adapter, IntakeJob, TrackedFrame
+from repro.core.obs import (FeedObs, MetricValue, ROWS_BOUNDS, mangle,
+                            write_jsonl)
 from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
                                          PartitionHolderManager,
@@ -104,18 +107,37 @@ from repro.core.storage import StorageJob
 COALESCE_DEFAULT_BATCHES = 4
 
 
-def _store_consumer(storage: StorageJob, ledger=None) -> Callable:
+def _store_consumer(storage: StorageJob, ledger=None, obs=None) -> Callable:
     """Storage-sink consumer: unwrap lineage-tagged batches (plan path);
     bare dicts (pure-ingestion / legacy call sites) store unversioned.
     On durable feeds the consumer marks the batch's WAL sequence numbers
     done in the ledger AFTER the (idempotent) store write returns — that
     ordering is the exactly-once contract: a checkpoint can only cite a
-    watermark whose records are already in the column store."""
+    watermark whose records are already in the column store.
+
+    Currency accounting (core/obs): once the write returns the rows are
+    snapshot-queryable, so this is where store-visible latency — the
+    paper's lag metric, intake stamp to queryable — lands in the
+    ``ingest_visible_latency_s`` histogram, and where the ``store.append``
+    span closes a traced batch's journey.  Both happen with no lock held
+    (this thread is the sink holder's drain loop)."""
+    lat_hist = (obs.registry.histogram("ingest_visible_latency_s")
+                if obs is not None else None)
+
     def consume(frame) -> None:
         if isinstance(frame, _StoreBatch):
+            t0 = time.perf_counter()
             storage.write(frame.batch, lineage=frame.lineage)
             if ledger is not None and frame.wal_seqs:
                 ledger.mark_done(frame.wal_seqs)
+            if obs is not None:
+                dur = time.perf_counter() - t0
+                now = time.monotonic()
+                if frame.t_intake:
+                    lat_hist.observe(max(0.0, now - frame.t_intake))
+                if frame.span_ids:
+                    obs.emit("store.append", frame.span_ids, t0=now - dur,
+                             dur=dur, rows=_frame_rows(frame.batch))
         else:
             storage.write(frame)
             if ledger is not None:
@@ -134,14 +156,21 @@ class _StoreBatch:
     dict).  The storage job records the lineage per stored chunk so the
     repair subsystem (core/repair.py) can find stale rows later.  On
     durable feeds ``wal_seqs`` carries the intake-log sequence numbers of
-    the raw frames this batch was parsed from (core/durability.py)."""
-    __slots__ = ("batch", "lineage", "wal_seqs")
+    the raw frames this batch was parsed from (core/durability.py);
+    ``span_ids``/``t_intake`` are the observability stamps lifted off the
+    raw ``TrackedFrame`` the same way (core/obs — span ids close the
+    trace at the store, the intake timestamp prices store-visible
+    latency)."""
+    __slots__ = ("batch", "lineage", "wal_seqs", "span_ids", "t_intake")
 
     def __init__(self, batch: Dict, lineage: Optional[Dict[str, int]],
-                 wal_seqs: Optional[Tuple[int, ...]] = None):
+                 wal_seqs: Optional[Tuple[int, ...]] = None,
+                 span_ids: Tuple[int, ...] = (), t_intake: float = 0.0):
         self.batch = batch
         self.lineage = lineage
         self.wal_seqs = wal_seqs
+        self.span_ids = span_ids
+        self.t_intake = t_intake
 
 
 @dataclasses.dataclass
@@ -195,8 +224,32 @@ class FeedConfig:
         return 0
 
 
+# FeedStats scalar fields backed by the metrics registry once bound:
+# integer event counts become counters, float durations/levels gauges.
+# Mutation sites keep their existing synchronization (the handle lock) —
+# counter/gauge updates are plain attribute writes, explicitly legal under
+# core locks (feedlint R6 flags only histogram observe / span emit there).
+_FEED_COUNTER_FIELDS = ("records_in", "frames_in", "stored", "retries",
+                        "steals", "coalesced_frames", "scale_ups",
+                        "scale_downs", "stale_rows", "repaired_rows",
+                        "compacted_rows")
+_FEED_GAUGE_FIELDS = ("wall_s", "storage_write_s", "worker_seconds",
+                      "backlog_p95_rows", "repair_lag_p50_s",
+                      "repair_lag_p95_s", "repair_drain_s",
+                      "durable_finish_s")
+_FEED_SCALAR_FIELDS = frozenset(_FEED_COUNTER_FIELDS + _FEED_GAUGE_FIELDS)
+
+
 @dataclasses.dataclass
 class FeedStats:
+    """Feed-level stats.  The attribute API below is the stable public
+    surface; once ``bind()`` attaches a ``MetricsRegistry`` (every
+    ``FeedHandle`` does this at construction) the scalar fields are
+    *views over registry instruments* — reads and writes go through the
+    feed's ``feed_<field>`` counter/gauge, so ``handle.metrics()`` and
+    the Prometheus exposition see the same live numbers benchmarks read
+    off this dataclass.  Unbound instances (direct construction in
+    tests) behave exactly like the plain dataclass they look like."""
     wall_s: float = 0.0
     records_in: int = 0
     frames_in: int = 0
@@ -242,6 +295,39 @@ class FeedStats:
     @property
     def records_per_s(self) -> float:
         return self.records_in / self.wall_s if self.wall_s else 0.0
+
+    # ------------------------------------------------- registry backing
+    def bind(self, registry) -> None:
+        """Back every scalar field with a ``feed_<name>`` instrument in
+        ``registry``; current values carry over.  Nested stats objects
+        (``computing``, ``repair``, ...) stay plain — the handle publishes
+        them into the registry at ``metrics()`` collect time instead."""
+        inst: Dict[str, object] = {}
+        for f in _FEED_COUNTER_FIELDS:
+            c = registry.counter("feed_" + f)
+            c.set(getattr(self, f))
+            inst[f] = c
+        for f in _FEED_GAUGE_FIELDS:
+            g = registry.gauge("feed_" + f)
+            g.set(getattr(self, f))
+            inst[f] = g
+        # installed LAST: its presence is what flips the access paths
+        self.__dict__["_inst"] = inst
+
+    def __getattribute__(self, name: str):
+        if name in _FEED_SCALAR_FIELDS:
+            inst = object.__getattribute__(self, "__dict__").get("_inst")
+            if inst is not None:
+                return inst[name].value
+        return object.__getattribute__(self, name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in _FEED_SCALAR_FIELDS:
+            inst = self.__dict__.get("_inst")
+            if inst is not None:
+                inst[name].set(value)
+                return
+        object.__setattr__(self, name, value)
 
 
 class _WorkerSlot:
@@ -308,7 +394,22 @@ class FeedHandle:
         self.repair: Optional[RepairJob] = None
         self.compaction: Optional[CompactionJob] = None
         self.durability: Optional[DurabilityRuntime] = None
+        # observability (core/obs): metrics are ALWAYS on — counters and
+        # gauges are plain attribute writes, histograms a tiny per-
+        # instrument lock — while span tracing is opt-in (plan trace=...).
+        # FeedStats scalars read/write through this registry from birth.
+        self.obs = FeedObs()
         self.stats = FeedStats()
+        self.stats.bind(self.obs.registry)
+        # currency + backlog histograms exist from birth so metrics()
+        # always carries the keys, observed or not
+        self._lat_hist = self.obs.registry.histogram(
+            "ingest_visible_latency_s")
+        self._repair_hist = self.obs.registry.histogram("repair_currency_s")
+        self._backlog_hist = self.obs.registry.histogram(
+            "backlog_rows", ROWS_BOUNDS)
+        self._backlog_age_hist = self.obs.registry.histogram(
+            "holder_backlog_age_s")
         self._t0 = 0.0
         self._lock = threading.Lock()               # lock-name: handle
         # appended by worker threads under the lock; read lock-free from
@@ -410,13 +511,21 @@ class FeedHandle:
             self.stats.computing.merge(r.stats)
         for g in self.stage_groups:
             self.stats.peak_partitions[g.name] = g.peak_partitions
+        # every worker pull samples queue depth into the registry, so the
+        # p95 reports for STATIC feeds too (it used to exist only while
+        # an elasticity controller was sampling); an elastic feed's
+        # controller ring still refines it — worst across all stage
+        # groups, since group 0's backlog can describe the wrong pool
+        self.stats.backlog_p95_rows = self._backlog_hist.percentile(0.95)
         if self.controller is not None:
-            # worst sampled backlog across ALL stage groups — for plans
-            # whose elastic group is a later stage, group 0's (static)
-            # backlog would describe the wrong pool
             self.stats.backlog_p95_rows = max(
-                (self.controller.backlog_p95(g.gid)
-                 for g in self.stage_groups), default=0.0)
+                self.stats.backlog_p95_rows,
+                max((self.controller.backlog_p95(g.gid)
+                     for g in self.stage_groups), default=0.0))
+        spec = self.obs.trace_spec
+        if spec is not None and spec.path:
+            with open(spec.path, "a", encoding="utf-8") as fp:
+                write_jsonl(self.obs.drain_trace(), fp)
         for name, sh in zip(self._sink_names, self.sink_holders):
             self.stats.sink_batches[name] = sh.pulled
         if self.repair is not None:
@@ -469,6 +578,88 @@ class FeedHandle:
                 "feed has no store sink: end the plan with .store(...) to "
                 "get a queryable column store")
         return self.storage.query()
+
+    # ---------------------------------------------------------- observability
+    def metrics(self) -> Dict[str, MetricValue]:
+        """Live, isolated snapshot of every feed metric: counters (int),
+        gauges (float), histograms (``HistogramSnapshot`` with
+        ``count``/``sum``/``percentile(q)``).  The paper's currency
+        numbers are native histograms here —
+        ``metrics()["ingest_visible_latency_s"]`` (intake stamp →
+        store-queryable) and ``["repair_currency_s"]`` (ref write → row
+        repaired) — live during ingestion, not just after join()."""
+        self._collect_metrics()
+        return self.obs.registry.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of ``metrics()``."""
+        self._collect_metrics()
+        return self.obs.registry.exposition()
+
+    def drain_trace(self):
+        """Drain and return the batch trace spans collected so far (empty
+        unless the plan enabled ``options(trace=...)``); see
+        docs/OBSERVABILITY.md for the span taxonomy."""
+        return self.obs.drain_trace()
+
+    def _collect_metrics(self) -> None:
+        """Refresh the published-on-read surfaces: nested stats objects
+        and module-level telemetry are folded into registry instruments
+        here, so each metrics()/exposition read is current.  Reads are
+        lock-free by design (the counters are single-writer or advisory;
+        see docs/CONCURRENCY.md 'racy by design')."""
+        reg = self.obs.registry
+        comp = ComputingStats()
+        comp.merge(self._retired_computing)
+        for r in list(self.runners):
+            comp.merge(r.stats)
+        reg.set_counters({
+            "computing_invocations": comp.invocations,
+            "computing_records": comp.records,
+            "computing_state_builds": comp.state_builds,
+            "computing_state_reuses": comp.state_reuses})
+        reg.set_gauges({
+            "computing_parse_s": comp.parse_s,
+            "computing_upload_s": comp.upload_s,
+            "computing_convert_s": comp.convert_s,
+            "computing_state_s": comp.state_s,
+            "computing_apply_s": comp.apply_s})
+        for sname, ss in comp.per_stage.items():
+            reg.set_gauges({mangle(f"stage_{sname}_apply_s"): ss.apply_s})
+            reg.set_counters(
+                {mangle(f"stage_{sname}_invocations"): ss.invocations})
+        # kernel-dispatch routing (process-wide tape, core/enrich/dispatch)
+        for (op, path), n in dispatch.path_stats().items():
+            reg.counter(mangle(f"dispatch_path_{op}_{path}")).set(n)
+        for g in self.stage_groups:
+            reg.gauge(mangle(f"elastic_partitions_{g.name}")).set(
+                len(g.holders))
+        if self.storage is not None:
+            reg.set_counters({"store_rows": self.storage.stored,
+                              "store_dead_rows": self.storage.dead_rows,
+                              "store_segments": self.storage.segment_count})
+            reg.set_gauges({"store_write_s": self.storage.write_s})
+            # compaction/merge level occupancy (PR 8's leveled layout)
+            for lvl, n in sorted(self.storage.level_histogram().items()):
+                reg.gauge(f"store_level_{lvl}_segments").set(n)
+            # per-segment read telemetry feeds the PIQUE roadmap item;
+            # the total makes scan traffic visible at a glance
+            reads = self.storage.segment_read_counts()
+            reg.counter("store_segment_reads").set(sum(reads.values()))
+        if self.repair is not None:
+            r = self.repair.stats
+            reg.set_counters({"repair_stale_rows": r.stale_rows,
+                              "repair_repaired_rows": r.repaired_rows})
+        if self.compaction is not None:
+            c = self.compaction.stats
+            reg.set_counters({"compaction_merges": c.merges,
+                              "compaction_rows_dropped": c.rows_dropped,
+                              "compaction_rows_rewritten": c.rows_rewritten})
+        if self.durability is not None:
+            led = self.durability.ledger
+            reg.set_counters(
+                {"wal_backlog_records": led.backlog()
+                 if hasattr(led, "backlog") else 0})
 
     # ------------------------------------------------------------ elasticity
     def scale_up(self, extra_partitions: int, stage: int = 0) -> int:
@@ -581,13 +772,22 @@ class FeedHandle:
             return records.concat_batches(group)
         merged: List = []
         seqs: List[int] = []
+        sids: List[int] = []
+        t_old = 0.0
         for g in group:
             merged.extend(g)
             seqs.extend(getattr(g, "wal_seqs", ()))
-        if seqs:
-            # durable feed: the coalesced batch covers every merged
-            # frame's WAL records — the stamp union rides to the sink
-            return TrackedFrame(merged, tuple(seqs))
+            sids.extend(getattr(g, "span_ids", ()))
+            ti = getattr(g, "t_intake", 0.0)
+            if ti and (not t_old or ti < t_old):
+                t_old = ti       # oldest stamp: latency covers the whole
+        if seqs or sids or t_old:
+            # the coalesced batch covers every merged frame's WAL records
+            # AND trace spans — the stamp unions ride to the sink
+            if sids:
+                self.obs.emit("coalesce", tuple(sids), t0=time.monotonic(),
+                              rows=rows, frames=len(group))
+            return TrackedFrame(merged, tuple(seqs), tuple(sids), t_old)
         return merged
 
     def _run_with_retry(self, runner: ComputingRunner, frame) -> Dict:
@@ -639,11 +839,27 @@ class FeedHandle:
                     continue
                 frame = self._coalesce(holder, frame)
                 # durable feed: lift the WAL stamp off the raw frame BEFORE
-                # the runner consumes it (parsing returns a plain dict)
+                # the runner consumes it (parsing returns a plain dict);
+                # the obs stamps (core/obs) ride the same vehicle
                 wal_seqs = getattr(frame, "wal_seqs", None)
+                span_ids = getattr(frame, "span_ids", ())
+                t_intake = getattr(frame, "t_intake", 0.0)
+                # backlog sampling happens on EVERY pull, controller or
+                # not — this is what makes backlog_p95_rows report for
+                # static feeds (it used to be elasticity-only)
+                rows_q, _ = holder.backlog()
+                self._backlog_hist.observe(float(rows_q))
+                if t_intake:
+                    self._backlog_age_hist.observe(
+                        max(0.0, time.monotonic() - t_intake))
                 t0 = time.perf_counter()
                 out = self._run_with_retry(runner, frame)
-                holder.record_service(time.perf_counter() - t0)
+                apply_dt = time.perf_counter() - t0
+                holder.record_service(apply_dt)
+                if span_ids:
+                    self.obs.emit(f"apply.{group.name}", span_ids,
+                                  t0=time.monotonic() - apply_dt,
+                                  dur=apply_dt, partition=pid)
                 if group.next is not None:
                     # intermediate stage group: hand the enriched batch to
                     # the next group's holders, not the sinks
@@ -663,8 +879,10 @@ class FeedHandle:
                         continue
                     try:
                         if si == self._store_sink_idx and \
-                                (lineage is not None or wal_seqs):
-                            sh.push(_StoreBatch(out, lineage, wal_seqs))
+                                (lineage is not None or wal_seqs or
+                                 span_ids or t_intake):
+                            sh.push(_StoreBatch(out, lineage, wal_seqs,
+                                                span_ids, t_intake))
                         else:
                             sh.push(out)
                         delivered += 1
@@ -843,6 +1061,9 @@ class FeedManager:
         # with the already-recovered runtime in the RecoveryState
         dspec = (plan.store_spec.durable
                  if plan.store_spec is not None else None)
+        if plan.trace is not None:
+            # span tracing is plan-opt-in; metrics are always on
+            handle.obs.enable_trace(plan.trace)
         if resume is not None:
             handle.durability = resume.runtime
         elif dspec is not None:
@@ -857,14 +1078,16 @@ class FeedManager:
                                             spec.store.upsert,
                                             spec.store.segment_rows,
                                             spec.store.zone_map_cols,
-                                            spec.store.sort_key)
+                                            spec.store.sort_key,
+                                            obs=handle.obs)
                 handle._store_sink_idx = i
-                consumer = _store_consumer(handle.storage, ledger)
+                consumer = _store_consumer(handle.storage, ledger,
+                                           obs=handle.obs)
             else:
                 consumer = spec.consumer
             sh = ActivePartitionHolder(
                 (f"{cfg.name}:storage", i), consumer,
-                capacity=cfg.holder_capacity)
+                capacity=cfg.holder_capacity, obs=handle.obs)
             self.holder_manager.register(sh)
             handle.sink_holders.append(sh)
             handle._sink_names.append(spec.name)
@@ -916,9 +1139,12 @@ class FeedManager:
                     handle._add_partition_locked(rt)
         wal = (handle.durability.wal
                if handle.durability is not None else None)
+        if wal is not None:
+            wal.set_fsync_histogram(
+                handle.obs.registry.histogram("wal_fsync_s"))
         handle.intake = IntakeJob(handle.adapter, handle.holders,
                                   lock=handle._lock, wal=wal,
-                                  ledger=ledger)
+                                  ledger=ledger, obs=handle.obs)
         handle.intake.start()
         if any(rt.elastic is not None for rt in handle.stage_groups):
             handle.controller = ElasticityController(

@@ -42,13 +42,23 @@ class TrackedFrame(list):
     the ``wal_seqs`` stamp rides through the worker to the store sink,
     where completion marks the ledger.  Replayed frames are built as
     TrackedFrames by recovery — the intake job logs only plain frames,
-    so a replay is never re-appended to the WAL."""
+    so a replay is never re-appended to the WAL.
 
-    __slots__ = ("wal_seqs",)
+    The observability layer (core/obs) rides the same vehicle:
+    ``span_ids`` are the trace span ids stamped at intake (coalescing
+    unions them), and ``t_intake`` is the monotonic intake timestamp
+    that store-visible latency (``ingest_visible_latency_s``) is
+    measured from.  Both default empty/0 so WAL- and recovery-built
+    frames are unchanged."""
 
-    def __init__(self, lines, wal_seqs: Tuple[int, ...]):
+    __slots__ = ("wal_seqs", "span_ids", "t_intake")
+
+    def __init__(self, lines, wal_seqs: Tuple[int, ...] = (),
+                 span_ids: Tuple[int, ...] = (), t_intake: float = 0.0):
         super().__init__(lines)
         self.wal_seqs = tuple(wal_seqs)
+        self.span_ids = tuple(span_ids)
+        self.t_intake = t_intake
 
 
 class Adapter:
@@ -264,7 +274,7 @@ class IntakeJob(threading.Thread):
 
     def __init__(self, adapter: Adapter, holders: List[PartitionHolder],
                  lock: Optional[threading.Lock] = None,
-                 wal=None, ledger=None):
+                 wal=None, ledger=None, obs=None):
         super().__init__(name="intake-job", daemon=True)
         self.adapter = adapter
         self.holders = holders
@@ -274,6 +284,9 @@ class IntakeJob(threading.Thread):
         self.error: Optional[BaseException] = None
         self._wal = wal
         self._ledger = ledger
+        self._obs = obs          # FeedObs (None for bare/test intakes)
+        self._wal_hist = (obs.registry.histogram("wal_append_s")
+                          if obs is not None and wal is not None else None)
         # the decoupled path passes the feed-handle lock in, so
         # scale_up's closing check and the drain flip serialize on
         # the SAME lock; the coupled baseline gets a private one
@@ -282,14 +295,36 @@ class IntakeJob(threading.Thread):
     def run(self) -> None:
         try:
             i = 0
+            t_last = time.perf_counter()
             for frame in self.adapter.frames():
+                draw_s = time.perf_counter() - t_last
+                wal_s = None
                 if self._wal is not None and not isinstance(
                         frame, (TrackedFrame, dict)):
                     # write-ahead ack: log before any holder sees it
                     off = getattr(self.adapter, "offset", 0)
+                    t_wal = time.perf_counter()
                     seq = self._wal.append_frame(off, frame)
+                    wal_s = time.perf_counter() - t_wal
                     self._ledger.note_logged(seq, off)
                     frame = TrackedFrame(frame, (seq,))
+                if self._obs is not None and not isinstance(frame, dict):
+                    # currency stamp (always) + span ids (tracing only);
+                    # no lock is held here (feedlint R6 discipline)
+                    if not isinstance(frame, TrackedFrame):
+                        frame = TrackedFrame(frame)
+                    frame.t_intake = time.monotonic()
+                    if wal_s is not None:
+                        self._wal_hist.observe(wal_s)
+                    if self._obs.tracing:
+                        frame.span_ids = (self._obs.new_span(),)
+                        self._obs.emit("intake.draw", frame.span_ids,
+                                       t0=frame.t_intake, dur=draw_s,
+                                       rows=len(frame))
+                        if wal_s is not None:
+                            self._obs.emit("wal.append", frame.span_ids,
+                                           t0=frame.t_intake, dur=wal_s,
+                                           rows=len(frame))
                 while True:
                     # snapshot the live holder list each frame (elasticity)
                     hs = list(self.holders)
@@ -307,6 +342,7 @@ class IntakeJob(threading.Thread):
                 self.records_in += (batch_rows(frame)
                                     if isinstance(frame, dict)
                                     else len(frame))
+                t_last = time.perf_counter()
         except BaseException as e:
             self.error = e
         finally:

@@ -195,9 +195,11 @@ class ActivePartitionHolder(PartitionHolder):
     The storage job's head is one of these."""
 
     def __init__(self, holder_id: Tuple[str, int],
-                 consumer: Callable[[Any], None], capacity: int = 16):
+                 consumer: Callable[[Any], None], capacity: int = 16,
+                 obs=None):
         super().__init__(holder_id, capacity)
         self._consumer = consumer
+        self._obs = obs   # FeedObs for sink.append spans (None = untraced)
         self._err: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._run, name=f"active-holder-{holder_id}", daemon=True)
@@ -213,7 +215,16 @@ class ActivePartitionHolder(PartitionHolder):
             try:
                 t0 = time.perf_counter()
                 self._consumer(frame)
-                self.record_service(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.record_service(dt)
+                if self._obs is not None:
+                    sids = getattr(frame, "span_ids", ())
+                    if sids:
+                        # consumer call and span emission both run with
+                        # no lock held (feedlint R3/R6 discipline)
+                        self._obs.emit("sink.append", sids,
+                                       t0=time.monotonic() - dt, dur=dt,
+                                       sink=self.holder_id[0])
             except BaseException as e:   # surfaced by join()
                 self._err = e
                 # fail fast, don't deadlock: close + drain so producers

@@ -51,6 +51,7 @@ from repro.core.durability import DurableSpec
 from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
+from repro.core.obs import TraceSpec
 from repro.core.refdata import RefStore
 from repro.core.repair import RepairSpec
 
@@ -119,7 +120,7 @@ class StageGroup:
 # FeedConfig knobs a plan carries through to the feed runtime
 _OPTION_KEYS = ("num_partitions", "holder_capacity", "work_stealing",
                 "max_retries", "retry_backoff_s", "coalesce_rows",
-                "coalesce_bytes", "fault_hook", "elastic")
+                "coalesce_bytes", "fault_hook", "elastic", "trace")
 
 
 def _coerce_elastic(value) -> Optional[ElasticSpec]:
@@ -131,6 +132,22 @@ def _coerce_elastic(value) -> Optional[ElasticSpec]:
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid elastic spec {value!r}: {e}") from e
     raise PlanError("elastic must be an ElasticSpec or dict, got "
+                    f"{type(value).__name__}")
+
+
+def _coerce_trace(value) -> Optional[TraceSpec]:
+    if value is None or isinstance(value, TraceSpec):
+        return value
+    if value is True:
+        return TraceSpec()
+    if value is False:
+        return None
+    if isinstance(value, dict):
+        try:
+            return TraceSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid trace spec {value!r}: {e}") from e
+    raise PlanError("trace must be a TraceSpec, dict, or bool, got "
                     f"{type(value).__name__}")
 
 
@@ -198,6 +215,9 @@ class IngestPlan:
     # for groups that do not declare their own.
     stage_groups: Tuple[StageGroup, ...] = ()
     elastic: Optional[ElasticSpec] = None
+    # batch-span tracing policy (core/obs): metrics are always on, but
+    # per-hop span emission is opt-in via ``.options(trace=...)``
+    trace: Optional[TraceSpec] = None
 
     @property
     def store_spec(self) -> Optional[StoreSpec]:
@@ -248,13 +268,16 @@ class Pipeline:
         work_stealing, max_retries, retry_backoff_s, coalesce_rows,
         coalesce_bytes, fault_hook, elastic (an ``ElasticSpec`` or kwargs
         dict — the feed-wide default elastic bounds; per-stage bounds go on
-        ``enrich(..., elastic=...)``)."""
+        ``enrich(..., elastic=...)``), trace (a ``TraceSpec``, kwargs dict,
+        or True — enables per-hop batch span tracing, see core/obs)."""
         for k in kw:
             if k not in _OPTION_KEYS:
                 raise PlanError(f"unknown option {k!r} "
                                 f"(valid: {', '.join(_OPTION_KEYS)})")
         if "elastic" in kw:
             kw = dict(kw, elastic=_coerce_elastic(kw["elastic"]))
+        if "trace" in kw:
+            kw = dict(kw, trace=_coerce_trace(kw["trace"]))
         self._opts.update(kw)
         return self
 

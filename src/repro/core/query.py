@@ -687,6 +687,10 @@ class Query:
             pending: List[Dict[str, np.ndarray]] = []
             scanned: Dict[str, List[np.ndarray]] = {}
             sel_cols: Optional[Tuple[str, ...]] = None
+            # per-unit read tally (segment path or chunk tag), kept local
+            # through the scan and published ONCE afterwards — the hot
+            # loop never touches the store-stats lock
+            reads: Dict[Tuple[int, str], int] = {}
             for ps in snap.parts:
                 for unit in ps.units:
                     is_seg = unit.path is not None
@@ -701,6 +705,10 @@ class Query:
                         stats.segments_pruned += int(is_seg)
                         continue
                     cols = unit.read(need)
+                    tag = (unit.path if unit.path is not None
+                           else f"chunk@{unit.base}")
+                    key = (ps.pid, tag)
+                    reads[key] = reads.get(key, 0) + 1
                     stats.rows_scanned += unit.rows
                     m = ps.live_mask(cols["id"], unit.base)
                     stats.rows_live += int(m.sum())
@@ -748,6 +756,8 @@ class Query:
                         stats.agg_fallback_dispatches += c
                         if path == "xla_64bit":
                             stats.agg_64bit_fallbacks += c
+            if reads:
+                self._storage.note_unit_reads(reads.items())
             stats.wall_s = time.perf_counter() - t0
             return QueryResult(out, stats, snap.watermark)
         finally:

@@ -127,11 +127,26 @@ class RepairStats:
     lag_samples: List[float] = dataclasses.field(default_factory=list)
 
     MAX_LAG_SAMPLES = 4096
+    # class attr (not a dataclass field, so merge/asdict never see it):
+    # optional core/obs histogram the lag samples dual-write into
+    _hist = None
+
+    def attach_histogram(self, hist) -> None:
+        """Dual-write lag samples into an obs histogram (the feed's
+        ``repair_currency_s``) in addition to the local ring — the
+        registry number and the dataclass percentiles then come from the
+        same observations, which is exactly what the benchmark's
+        registry-vs-driver cross-check validates."""
+        self._hist = hist
 
     def add_lag(self, lag: float) -> None:
         self.lag_samples.append(lag)
         if len(self.lag_samples) > self.MAX_LAG_SAMPLES:
             del self.lag_samples[:len(self.lag_samples) // 2]
+        if self._hist is not None:
+            # callers hold at most the repair-step lock (blocking-ok):
+            # histogram observes are legal there (feedlint R6)
+            self._hist.observe(lag)
 
     def _lag_q(self, q: float) -> float:
         if not self.lag_samples:
@@ -193,6 +208,10 @@ class RepairJob(threading.Thread):
         self.refstore = refstore
         self.handle = handle      # duck-typed FeedHandle (None in tests)
         self.stats = RepairStats()
+        self._obs = getattr(handle, "obs", None)
+        if self._obs is not None:
+            self.stats.attach_histogram(
+                self._obs.registry.histogram("repair_currency_s"))
         self.error: Optional[BaseException] = None
         self._tables: Tuple[str, ...] = plan.udf.ref_tables
         # table -> ALL declared probe columns (a chain may probe one table
@@ -436,6 +455,7 @@ class RepairJob(threading.Thread):
         # rejected unit keeps its old lineage, stays stale, and is
         # re-scanned.
         epoch = part.epoch
+        t_unit = time.perf_counter()
         try:
             batch = part.read_rows(start, n)
         except IndexError:
@@ -508,6 +528,12 @@ class RepairJob(threading.Thread):
         self.stats.repaired_rows += repaired
         if repaired:
             self.stats.add_lag(max(0.0, time.monotonic() - since))
+        if self._obs is not None and self._obs.tracing:
+            # under the repair-step lock only (blocking-ok: R6-exempt,
+            # ordering edge declared in analysis/annotations.py)
+            self._obs.emit("repair.unit", (), t0=time.monotonic(),
+                           dur=time.perf_counter() - t_unit, rows=n,
+                           repaired=repaired, partition=part.pid)
         return repaired
 
     # -------------------------------------------------------------- drain

@@ -273,8 +273,16 @@ class StoragePartition:
     def __init__(self, pid: int, spill_dir: Optional[str] = None,
                  segment_rows: int = 100_000,
                  zone_map_cols: Optional[Tuple[str, ...]] = None,
-                 sort_key: Optional[str] = None):
+                 sort_key: Optional[str] = None, obs=None):
         self.pid = pid
+        # observability (core/obs): flush telemetry is RECORDED under the
+        # partition lock (plain list append) but PUBLISHED — histogram
+        # observe + span emit — only after release, by the next public
+        # write/flush on this partition (feedlint R6 discipline)
+        self._obs = obs
+        self._flush_hist = (obs.registry.histogram("store_flush_s")
+                            if obs is not None else None)
+        self._flush_events: List[Tuple[int, float]] = []  # guarded-by: _lock
         self.spill_dir = spill_dir
         self.segment_rows = segment_rows
         # None = zone-map every eligible column; () disables
@@ -358,7 +366,9 @@ class StoragePartition:
                 self._chunk_dead += n - int(uniq.shape[0])
             self._index.put(ids[take], np.arange(base, base + n))
             self._append_locked(rows, n, lineage)
-            return int((fresh_mask & take).sum())
+            stored = int((fresh_mask & take).sum())
+        self._drain_flush_events()
+        return stored
 
     def _append_locked(self,  # requires-lock: _lock
                        rows: Dict[str, np.ndarray], n: int,
@@ -375,6 +385,7 @@ class StoragePartition:
         # segment write + manifest + index update in one lock window
         if not self._chunks:
             return
+        t_flush = time.perf_counter()
         seg = {k: np.concatenate([c[k] for c in self._chunks])
                for k in self._chunks[0]}
         n = int(seg["id"].shape[0])
@@ -411,6 +422,8 @@ class StoragePartition:
         self._chunks = []
         self._chunk_lineage = []
         self._rows_buffered = 0
+        if self._obs is not None:
+            self._flush_events.append((n, time.perf_counter() - t_flush))
 
     def _write_manifest_locked(self) -> None:  # requires-lock: _lock
         # feedlint: allow[blocking-under-lock] manifest rewrite must be
@@ -459,6 +472,23 @@ class StoragePartition:
                 self._flush_locked()
                 if self._manifest_dirty:
                     self._write_manifest_locked()
+            self._drain_flush_events()
+
+    def _drain_flush_events(self) -> None:
+        """Publish queued flush telemetry with NO lock held.  Flushes
+        that happen inside other lock windows (compaction's hazard
+        flush) stay queued until the next public write/flush — late,
+        never lost, never emitted under a core lock."""
+        if self._obs is None:
+            return
+        with self._lock:
+            if not self._flush_events:
+                return
+            events, self._flush_events = self._flush_events, []
+        for n, dur in events:
+            self._flush_hist.observe(dur)
+            self._obs.emit("store.flush", (), t0=time.monotonic() - dur,
+                           dur=dur, rows=n, partition=self.pid)
 
     def _load_manifest_locked(self) -> Optional[Dict]:
         # requires-lock: _lock
@@ -1007,7 +1037,8 @@ class StoragePartition:
                 np.asarray(global_rows, np.int64)[live])
             self._index.put(ids[live], np.arange(base, base + n))
             self._append_locked(rows, n, lineage)
-            return n
+        self._drain_flush_events()
+        return n
 
     def delete_rows(self, ids: np.ndarray, global_rows: np.ndarray,
                     expect_epoch: Optional[int] = None) -> int:
@@ -1105,9 +1136,9 @@ class StorageJob:
     def __init__(self, num_partitions: int, spill_dir: Optional[str] = None,
                  upsert: bool = False, segment_rows: int = 100_000,
                  zone_map_cols: Optional[Tuple[str, ...]] = None,
-                 sort_key: Optional[str] = None):
+                 sort_key: Optional[str] = None, obs=None):
         self.partitions = [StoragePartition(i, spill_dir, segment_rows,
-                                            zone_map_cols, sort_key)
+                                            zone_map_cols, sort_key, obs=obs)
                            for i in range(num_partitions)]
         self.upsert = upsert
         # counters are write-guarded: mutated under the stats lock by
@@ -1115,6 +1146,9 @@ class StorageJob:
         self.stored = 0          # write-guarded-by: _lock
         self.batches = 0         # write-guarded-by: _lock — write() calls
         self.write_s = 0.0       # write-guarded-by: _lock
+        # per-unit read tallies from the query layer ((pid, unit tag) ->
+        # count; the PIQUE roadmap item's access-frequency signal)
+        self._seg_reads: Dict[Tuple[int, str], int] = {}  # guarded-by: _lock
         self._lock = threading.Lock()    # lock-name: store-stats
 
     def write(self, batch: Dict[str, np.ndarray],
@@ -1167,6 +1201,22 @@ class StorageJob:
             for lv, c in p.level_histogram().items():
                 hist[lv] = hist.get(lv, 0) + c
         return hist
+
+    def note_unit_reads(self, items) -> None:
+        """Record per-unit read counts from a query execution.  The query
+        layer tallies locally per ``execute()`` and publishes here ONCE,
+        outside every scan lock, so the hot per-unit loop never touches
+        this lock."""
+        with self._lock:
+            for key, n in items:
+                self._seg_reads[key] = self._seg_reads.get(key, 0) + n
+
+    def segment_read_counts(self) -> Dict[Tuple[int, str], int]:
+        """``(partition, unit tag) -> reads`` since startup — how often
+        each segment/chunk was scanned by the query subsystem (the
+        access-frequency input a PIQUE-style adaptive layout needs)."""
+        with self._lock:
+            return dict(self._seg_reads)
 
     def scan(self):
         for p in self.partitions:

@@ -1,4 +1,4 @@
-"""feedlint self-tests: one seeded violation per rule (R1-R5) that must
+"""feedlint self-tests: one seeded violation per rule (R1-R6) that must
 fire, a clean counterpart per rule that must NOT (false-positive guard),
 the ``Annotated[..., guarded_by(...)]`` declaration form, the CLI exit
 codes the CI gate relies on, and the integration pin that the real
@@ -325,6 +325,69 @@ class Table:
 '''
     findings = lint_src(tmp_path, src)
     assert "listener-under-lock" in rules_of(findings)
+
+
+# ---------------------------------------------------------------------------
+# R6 obs-under-lock
+# ---------------------------------------------------------------------------
+
+R6_VIOLATION = '''
+import threading
+
+class Stage:
+    def __init__(self, hist, obs):
+        self._lock = threading.Lock()   # lock-name: stage
+        self._hist = hist
+        self._obs = obs
+        self._rows = 0                  # guarded-by: _lock
+
+    def push(self, n, dt):
+        with self._lock:
+            self._rows += n
+            self._hist.observe(dt)      # BAD: telemetry under the lock
+'''
+
+
+def test_r6_observe_under_lock_fires(tmp_path):
+    findings = lint_src(tmp_path, R6_VIOLATION)
+    assert rules_of(findings) == ["obs-under-lock"]
+    assert ".observe()" in findings[0].msg
+
+
+def test_r6_emit_under_lock_fires(tmp_path):
+    src = R6_VIOLATION.replace("self._hist.observe(dt)",
+                               "self._obs.emit('x', (), dt)")
+    findings = lint_src(tmp_path, src)
+    assert rules_of(findings) == ["obs-under-lock"]
+    assert ".emit()" in findings[0].msg
+
+
+def test_r6_clean_after_release(tmp_path):
+    src = R6_VIOLATION.replace(
+        "            self._rows += n\n"
+        "            self._hist.observe(dt)      # BAD: telemetry under the lock",
+        "            self._rows += n\n"
+        "        self._hist.observe(dt)")
+    assert lint_src(tmp_path, src) == []
+
+
+def test_r6_counters_and_gauges_stay_legal_under_lock(tmp_path):
+    src = R6_VIOLATION.replace("self._hist.observe(dt)",
+                               "self._hist.inc(n) or self._hist.set(n)")
+    assert lint_src(tmp_path, src) == []
+
+
+def test_r6_blocking_ok_lock_is_exempt(tmp_path):
+    src = R6_VIOLATION.replace("# lock-name: stage",
+                               "# lock-name: stage blocking-ok")
+    assert lint_src(tmp_path, src) == []
+
+
+def test_r6_allow_comment_suppresses_with_reason(tmp_path):
+    src = R6_VIOLATION.replace(
+        "self._hist.observe(dt)      # BAD: telemetry under the lock",
+        "self._hist.observe(dt)  # feedlint: allow[obs-under-lock] test rig")
+    assert lint_src(tmp_path, src) == []
 
 
 # ---------------------------------------------------------------------------

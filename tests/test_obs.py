@@ -1,0 +1,276 @@
+"""Observability tests: registry semantics, exposition golden, tracer
+ring behavior, span lifecycle on a real feed, FeedStats backward-compat
+pins, currency accounting, and the static-feed backlog_p95 regression.
+
+Deliberately hypothesis-free: CI runs this module in the minimal
+plan-api container, so the observability surface is pinned even where
+the property-test extras are not installed.
+"""
+
+import json
+
+import pytest
+
+from repro.core import (FeedManager, MetricsRegistry, RefStore,
+                        SyntheticAdapter, TraceSpec, pipeline)
+from repro.core.enrich import queries as Q
+from repro.core.feed import FeedStats
+from repro.core.obs import Tracer, mangle, percentile_of
+
+
+def make_manager(scale=0.002):
+    store = RefStore()
+    Q.make_reference_tables(store, scale=scale, seed=7)
+    return FeedManager(store)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_get_or_create_and_update():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    c.inc()
+    c.inc(4)
+    assert reg.counter("hits") is c          # get-or-create
+    assert reg.snapshot()["hits"] == 5
+    c.set(2)
+    assert reg.snapshot()["hits"] == 2
+
+    g = reg.gauge("depth")
+    g.set(1.5)
+    g.add(0.5)
+    assert reg.snapshot()["depth"] == 2.0
+
+
+def test_histogram_buckets_sum_count_percentile():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", bounds=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    snap = reg.snapshot()["lat"]
+    assert snap.count == 5
+    assert snap.sum == pytest.approx(56.05)
+    assert snap.bucket_counts == (1, 2, 1)
+    assert snap.overflow == 1
+    assert snap.percentile(0.5) == 0.5
+    assert h.percentile(0.5) == 0.5          # live view agrees
+    assert snap.cumulative_buckets() == [(0.1, 1), (1.0, 3), (10.0, 4)]
+
+
+def test_cross_kind_name_collision_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.histogram("x")
+
+
+def test_snapshot_is_isolated_from_later_updates():
+    reg = MetricsRegistry()
+    reg.counter("n").inc(1)
+    reg.histogram("h").observe(1.0)
+    snap = reg.snapshot()
+    reg.counter("n").inc(10)
+    reg.histogram("h").observe(2.0)
+    assert snap["n"] == 1
+    assert snap["h"].count == 1
+    assert reg.snapshot()["n"] == 11
+
+
+def test_merge_counters_add_gauges_overwrite_histograms_combine():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("n").inc(2)
+    b.counter("n").inc(3)
+    a.gauge("g").set(1.0)
+    b.gauge("g").set(9.0)
+    a.histogram("h", bounds=(1.0, 2.0)).observe(0.5)
+    b.histogram("h", bounds=(1.0, 2.0)).observe(1.5)
+    a.merge(b)
+    snap = a.snapshot()
+    assert snap["n"] == 5
+    assert snap["g"] == 9.0
+    assert snap["h"].count == 2
+    assert snap["h"].bucket_counts == (1, 1)
+
+
+def test_mangle_and_percentile_helpers():
+    assert mangle("dispatch_path_('seg', 'kern')") == \
+        "dispatch_path___seg____kern__"
+    assert percentile_of([], 0.5) == 0.0
+    assert percentile_of([3.0, 1.0, 2.0], 0.5) == 2.0
+
+
+def test_exposition_golden():
+    reg = MetricsRegistry()
+    reg.counter("feed_stored").set(42)
+    reg.gauge("wall_s").set(1.5)
+    h = reg.histogram("lat_s", bounds=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    assert reg.exposition() == (
+        "# TYPE feed_stored counter\n"
+        "feed_stored 42\n"
+        "# TYPE lat_s histogram\n"
+        'lat_s_bucket{le="0.1"} 1\n'
+        'lat_s_bucket{le="1"} 2\n'
+        'lat_s_bucket{le="+Inf"} 3\n'
+        "lat_s_sum 5.55\n"
+        "lat_s_count 3\n"
+        "# TYPE wall_s gauge\n"
+        "wall_s 1.5\n")
+
+
+# ---------------------------------------------------------------------------
+# tracer ring
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_overflow_drops_oldest():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.emit("hop", (tr.new_id(),), t0=float(i))
+    spans = tr.drain()
+    assert len(spans) == 4
+    assert [s["t0"] for s in spans] == [6.0, 7.0, 8.0, 9.0]
+    assert tr.drain() == []                  # drain empties
+
+
+def test_tracer_span_ids_are_unique_and_start_at_one():
+    tr = Tracer()
+    ids = [tr.new_id() for _ in range(5)]
+    assert ids == [1, 2, 3, 4, 5]            # 0 is the tracing-off id
+
+
+def test_trace_spec_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        TraceSpec(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# FeedStats backward compatibility (registry-backed views)
+# ---------------------------------------------------------------------------
+
+def test_unbound_feedstats_is_a_plain_dataclass():
+    s = FeedStats()
+    assert s.stored == 0
+    s.stored += 7
+    s.records_in = 100
+    s.wall_s = 2.0
+    assert s.stored == 7
+    assert s.records_per_s == 50.0
+
+
+def test_bound_feedstats_reads_and_writes_through_the_registry():
+    reg = MetricsRegistry()
+    s = FeedStats()
+    s.stored = 3
+    s.bind(reg)
+    assert reg.snapshot()["feed_stored"] == 3     # carried over
+    s.stored += 4
+    assert s.stored == 7
+    assert reg.snapshot()["feed_stored"] == 7     # same storage
+    reg.counter("feed_stored").set(11)
+    assert s.stored == 11                         # view, not copy
+    s.wall_s = 0.5
+    assert reg.snapshot()["feed_wall_s"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# live feed: metrics, currency, spans, backlog p95
+# ---------------------------------------------------------------------------
+
+def _run_traced_feed(mgr, name, **opts):
+    plan = (pipeline(SyntheticAdapter(total=600, frame_size=50, seed=3),
+                     name)
+            .parse(batch_size=50)
+            .options(num_partitions=1, **opts)
+            .enrich(Q.Q2)          # Q2's state build dispatches a
+            .store())              # segment op -> dispatch_path metrics
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+    return h, stats
+
+
+def test_feed_metrics_surface_and_currency_accounting():
+    mgr = make_manager()
+    h, stats = _run_traced_feed(mgr, "obs-metrics")
+    m = h.metrics()
+    assert m["feed_stored"] == stats.stored == 600
+    assert m["feed_records_in"] == 600
+    # currency: every stored batch was stamped at intake and observed at
+    # store-append, so the native histogram carries real samples
+    lat = m["ingest_visible_latency_s"]
+    assert lat.count > 0
+    assert lat.percentile(0.95) > 0.0
+    # computing attribution flows into the registry on collection
+    assert m["computing_invocations"] > 0
+    assert any(k.startswith("stage_") and k.endswith("_apply_s")
+               for k in m)
+    assert any(k.startswith("dispatch_path_") for k in m)
+    assert m["store_rows"] == 600
+    text = h.metrics_text()
+    assert "# TYPE feed_stored counter" in text
+    assert "ingest_visible_latency_s_bucket" in text
+
+
+def test_trace_spans_cover_the_batch_journey():
+    mgr = make_manager()
+    h, stats = _run_traced_feed(mgr, "obs-trace", trace=True)
+    spans = h.drain_trace()
+    names = {s["name"] for s in spans}
+    assert "intake.draw" in names
+    assert "store.append" in names
+    assert any(n.startswith("apply.") for n in names)
+    # one batch's journey: an intake span id shows up again at apply and
+    # at the store sink (ids ride TrackedFrame like wal_seqs)
+    draw_ids = {i for s in spans if s["name"] == "intake.draw"
+                for i in s["spans"]}
+    apply_ids = {i for s in spans if s["name"].startswith("apply.")
+                 for i in s["spans"]}
+    store_ids = {i for s in spans if s["name"] == "store.append"
+                 for i in s["spans"]}
+    assert draw_ids & apply_ids & store_ids
+    assert h.drain_trace() == []             # drained
+
+
+def test_trace_path_dumps_jsonl_at_join(tmp_path):
+    mgr = make_manager()
+    out = tmp_path / "trace.jsonl"
+    h, stats = _run_traced_feed(
+        mgr, "obs-dump", trace={"path": str(out)})
+    lines = out.read_text().strip().splitlines()
+    assert lines
+    spans = [json.loads(ln) for ln in lines]
+    assert all("name" in s and "t0" in s for s in spans)
+
+
+def test_untraced_feed_has_no_span_overhead_surface():
+    mgr = make_manager()
+    h, stats = _run_traced_feed(mgr, "obs-off")
+    assert h.drain_trace() == []
+    assert h.obs.tracing is False
+    assert h.obs.new_span() == 0
+
+
+def test_static_feed_reports_nonzero_backlog_p95_under_backlog():
+    """Regression: backlog_p95_rows used to report only while an
+    elasticity controller was sampling; a static (non-elastic) feed
+    always showed 0.  Every worker pull now samples queue depth, so an
+    induced backlog (fast intake, uncoalesced frames, one worker that
+    stalls on the first JIT compile) must surface in the p95."""
+    mgr = make_manager()
+    plan = (pipeline(SyntheticAdapter(total=1500, frame_size=50, seed=11),
+                     "obs-backlog")
+            .parse(batch_size=50)
+            .options(num_partitions=1, coalesce_rows=0)
+            .enrich(Q.Q1)
+            .store())
+    h = mgr.submit(plan)
+    stats = h.join(timeout=120)
+    assert stats.stored == 1500
+    assert h.controller is None              # genuinely static
+    assert stats.backlog_p95_rows > 0.0
+    assert h.metrics()["backlog_rows"].count > 0
