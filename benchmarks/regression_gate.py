@@ -68,6 +68,10 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
             # tracing on vs off: interleaved-median ratio, same floor at
             # every scale — observability must stay ~free
             ("obs_overhead_ratio", ">=", 0.97),
+            # the FULL feedscope surface (profiler + health + scraped
+            # live endpoint) vs metrics-only, same floor at every scale;
+            # presence enforced, so CI must run fig25 with --profile
+            ("profile_overhead_ratio", ">=", 0.97),
         ],
         "fig_recovery": [
             # exactly-once across SIGKILL/restart is scale-independent
@@ -98,6 +102,7 @@ THRESHOLDS: Dict[str, Dict[str, List[Threshold]]] = {
         "fig25": [
             ("bursty_elastic_vs_best_static", ">=", 0.9),
             ("obs_overhead_ratio", ">=", 0.97),
+            ("profile_overhead_ratio", ">=", 0.97),
         ],
         "fig_recovery": [
             ("rows_lost_total", "==", 0),

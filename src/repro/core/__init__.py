@@ -44,10 +44,17 @@ from repro.core.intake import (  # noqa: F401
     TrackedFrame,
 )
 from repro.core.obs import (  # noqa: F401
+    FeedHealthModel,
     FeedObs,
+    HealthReport,
+    HealthSpec,
     HistogramSnapshot,
+    JourneyProfiler,
     MetricsRegistry,
     MetricValue,
+    ObsServer,
+    ProfileReport,
+    ProfileSpec,
     Tracer,
     TraceSpec,
 )

@@ -87,8 +87,10 @@ from repro.core.durability import DurabilityRuntime
 from repro.core.elasticity import ElasticityController, ElasticSpec
 from repro.core.enrich import dispatch
 from repro.core.enrich.queries import EnrichUDF
-from repro.core.intake import Adapter, IntakeJob, TrackedFrame
-from repro.core.obs import (FeedObs, MetricValue, ROWS_BOUNDS, mangle,
+from repro.core.intake import Adapter, IntakeJob, TrackedBatch, TrackedFrame
+from repro.core.obs import (FeedHealthModel, FeedObs, HealthReport,
+                            JourneyProfiler, MetricValue, ObsServer,
+                            ProfileReport, ROWS_BOUNDS, TraceSpec, mangle,
                             write_jsonl)
 from repro.core.partition_holder import (ActivePartitionHolder,
                                          PartitionHolder,
@@ -127,7 +129,8 @@ def _store_consumer(storage: StorageJob, ledger=None, obs=None) -> Callable:
     def consume(frame) -> None:
         if isinstance(frame, _StoreBatch):
             t0 = time.perf_counter()
-            storage.write(frame.batch, lineage=frame.lineage)
+            storage.write(frame.batch, lineage=frame.lineage,
+                          span_ids=frame.span_ids)
             if ledger is not None and frame.wal_seqs:
                 ledger.mark_done(frame.wal_seqs)
             if obs is not None:
@@ -410,6 +413,15 @@ class FeedHandle:
             "backlog_rows", ROWS_BOUNDS)
         self._backlog_age_hist = self.obs.registry.histogram(
             "holder_backlog_age_s")
+        # feedscope (core/obs): journey profiler (opt-in via
+        # options(profile=...)), SLO health model (lazy — see health()),
+        # and their always-present instruments: the worker_errors counter
+        # feeds the health rule of the same name, feed_health publishes
+        # the verdict (0 ok / 1 degraded / 2 stalled)
+        self.profiler: Optional[JourneyProfiler] = None
+        self._health_model: Optional[FeedHealthModel] = None
+        self._health_gauge = self.obs.registry.gauge("feed_health")
+        self._worker_err_counter = self.obs.registry.counter("worker_errors")
         self._t0 = 0.0
         self._lock = threading.Lock()               # lock-name: handle
         # appended by worker threads under the lock; read lock-free from
@@ -516,7 +528,10 @@ class FeedHandle:
         # an elasticity controller was sampling); an elastic feed's
         # controller ring still refines it — worst across all stage
         # groups, since group 0's backlog can describe the wrong pool
-        self.stats.backlog_p95_rows = self._backlog_hist.percentile(0.95)
+        p95 = self._backlog_hist.percentile(0.95)
+        # empty-histogram percentiles are nan by design (core/obs): an
+        # idle feed's summary stat stays the neutral 0.0
+        self.stats.backlog_p95_rows = p95 if p95 == p95 else 0.0
         if self.controller is not None:
             self.stats.backlog_p95_rows = max(
                 self.stats.backlog_p95_rows,
@@ -579,6 +594,14 @@ class FeedHandle:
                 "get a queryable column store")
         return self.storage.query()
 
+    def _note_worker_err(self, e: BaseException) -> None:
+        """Record a worker-loop failure: the exception for join() to
+        re-raise, plus the ``worker_errors`` counter the health model's
+        rule of the same name watches."""
+        with self._lock:
+            self._worker_errs.append(e)
+        self._worker_err_counter.inc()
+
     # ---------------------------------------------------------- observability
     def metrics(self) -> Dict[str, MetricValue]:
         """Live, isolated snapshot of every feed metric: counters (int),
@@ -602,6 +625,49 @@ class FeedHandle:
         docs/OBSERVABILITY.md for the span taxonomy."""
         return self.obs.drain_trace()
 
+    def profile(self) -> Optional[ProfileReport]:
+        """feedscope: drain the tracer into the journey profiler and
+        return the rolling critical-path report — per-hop service/queue
+        percentiles, critical-path fractions, and the ranked bottleneck
+        verdict (core/obs/profile.py).  ``None`` unless the plan enabled
+        ``options(profile=...)``.  As a side effect the verdict lands in
+        the registry as ``bottleneck_<hop>_frac`` gauges, so ``/metrics``
+        scrapes carry the attribution without a JSON round trip."""
+        prof = self.profiler
+        if prof is None:
+            return None
+        prof.ingest(self.obs.drain_trace())
+        report = prof.report()
+        reg = self.obs.registry
+        for hop, frac in report.ranked:
+            reg.gauge(mangle(f"bottleneck_{hop}_frac")).set(frac)
+        return report
+
+    def health(self) -> HealthReport:
+        """feedscope: evaluate the feed's SLO rules (core/obs/health.py)
+        against the current metrics snapshot and return the report; the
+        verdict also lands in the ``feed_health`` gauge (0 ok / 1
+        degraded / 2 stalled).  The model is created lazily from the
+        plan's ``options(health=...)`` spec (defaults when absent) and
+        inherits the repair SLO (``RepairSpec.max_lag_s``) when the
+        store declared one."""
+        with self._lock:
+            model = self._health_model
+            if model is None:
+                max_lag = None
+                if (self.plan is not None and
+                        self.plan.store_spec is not None and
+                        self.plan.store_spec.refresh is not None):
+                    max_lag = self.plan.store_spec.refresh.max_lag_s
+                spec = self.plan.health if self.plan is not None else None
+                model = self._health_model = FeedHealthModel(
+                    spec, max_lag_s=max_lag)
+        # evaluate OUTSIDE the handle lock: metrics() touches holder and
+        # instrument locks and must never nest under `handle`
+        report = model.evaluate(self.metrics())
+        self._health_gauge.set(float(report.code))
+        return report
+
     def _collect_metrics(self) -> None:
         """Refresh the published-on-read surfaces: nested stats objects
         and module-level telemetry are folded into registry instruments
@@ -617,7 +683,8 @@ class FeedHandle:
             "computing_invocations": comp.invocations,
             "computing_records": comp.records,
             "computing_state_builds": comp.state_builds,
-            "computing_state_reuses": comp.state_reuses})
+            "computing_state_reuses": comp.state_reuses,
+            "computing_calibrations": comp.calibrations})
         reg.set_gauges({
             "computing_parse_s": comp.parse_s,
             "computing_upload_s": comp.upload_s,
@@ -634,6 +701,24 @@ class FeedHandle:
         for g in self.stage_groups:
             reg.gauge(mangle(f"elastic_partitions_{g.name}")).set(
                 len(g.holders))
+        # instantaneous queued rows across every live holder (stage
+        # groups + sink queues) — the health model's stall/growth signal;
+        # each backlog() read takes only that holder's own leaf lock
+        backlog_now = 0
+        with self._lock:
+            live = [h for g in self.stage_groups for h in g.holders]
+        for h in live:
+            rows_q, _ = h.backlog()
+            backlog_now += rows_q
+        for sh in self.sink_holders:
+            rows_q, _ = sh.backlog()
+            backlog_now += rows_q
+        reg.gauge("backlog_rows_now").set(float(backlog_now))
+        # per-sink delivery counters (live view of stats.sink_batches,
+        # which is only folded at _finalize): progress signal for the
+        # health model's stall rule on tee-only feeds
+        for sname, sh in zip(self._sink_names, self.sink_holders):
+            reg.counter(mangle(f"sink_{sname}_batches")).set(sh.pulled)
         if self.storage is not None:
             reg.set_counters({"store_rows": self.storage.stored,
                               "store_dead_rows": self.storage.dead_rows,
@@ -768,25 +853,34 @@ class FeedHandle:
             return frame
         with self._lock:
             self.stats.coalesced_frames += len(group) - 1
-        if kind is dict:
-            return records.concat_batches(group)
-        merged: List = []
         seqs: List[int] = []
         sids: List[int] = []
         t_old = 0.0
         for g in group:
-            merged.extend(g)
-            seqs.extend(getattr(g, "wal_seqs", ()))
+            seqs.extend(getattr(g, "wal_seqs", None) or ())
             sids.extend(getattr(g, "span_ids", ()))
             ti = getattr(g, "t_intake", 0.0)
             if ti and (not t_old or ti < t_old):
                 t_old = ti       # oldest stamp: latency covers the whole
-        if seqs or sids or t_old:
+        if sids:
             # the coalesced batch covers every merged frame's WAL records
-            # AND trace spans — the stamp unions ride to the sink
-            if sids:
-                self.obs.emit("coalesce", tuple(sids), t0=time.monotonic(),
-                              rows=rows, frames=len(group))
+            # AND trace spans — the stamp unions ride to the sink; the
+            # span emission is what merges the journeys in the profiler
+            self.obs.emit("coalesce", tuple(sids), t0=time.monotonic(),
+                          rows=rows, frames=len(group))
+        if kind is dict:
+            # downstream stage groups carry dict batches: union the
+            # stamps onto a TrackedBatch so multi-group journeys stay
+            # whole end to end (the pre-feedscope code dropped them here)
+            merged_b = records.concat_batches(group)
+            if seqs or sids or t_old:
+                return TrackedBatch(merged_b, tuple(seqs), tuple(sids),
+                                    t_old)
+            return merged_b
+        merged: List = []
+        for g in group:
+            merged.extend(g)
+        if seqs or sids or t_old:
             return TrackedFrame(merged, tuple(seqs), tuple(sids), t_old)
         return merged
 
@@ -862,7 +956,12 @@ class FeedHandle:
                                   dur=apply_dt, partition=pid)
                 if group.next is not None:
                     # intermediate stage group: hand the enriched batch to
-                    # the next group's holders, not the sinks
+                    # the next group's holders, not the sinks — re-wrapped
+                    # so the obs/WAL stamps survive the hop and the next
+                    # group's apply span joins the same journey
+                    if wal_seqs or span_ids or t_intake:
+                        out = TrackedBatch(out, wal_seqs, span_ids,
+                                           t_intake)
                     self._push_downstream(group, out)
                     continue
                 out = self._project(out)
@@ -883,6 +982,13 @@ class FeedHandle:
                                  span_ids or t_intake):
                             sh.push(_StoreBatch(out, lineage, wal_seqs,
                                                 span_ids, t_intake))
+                        elif span_ids or t_intake:
+                            # tee sinks get the same dict payload wrapped
+                            # with the obs stamps so their sink.append
+                            # spans carry ids — a slow tee then shows up
+                            # in the critical-path profile by name
+                            sh.push(TrackedBatch(out, None, span_ids,
+                                                 t_intake))
                         else:
                             sh.push(out)
                         delivered += 1
@@ -897,9 +1003,8 @@ class FeedHandle:
                     self.adapter.stop()
         except BaseException as e:
             # feedlint R1 fix: error collection races join()'s liveness
-            # checks without the lock
-            with self._lock:
-                self._worker_errs.append(e)
+            # checks without the lock (inside _note_worker_err)
+            self._note_worker_err(e)
         finally:
             self._on_worker_exit(group, slot)
 
@@ -971,6 +1076,9 @@ class FeedManager:
         self.holder_manager = PartitionHolderManager()
         self._lock = threading.Lock()           # lock-name: manager
         self.feeds: Dict[str, FeedHandle] = {}  # guarded-by: _lock
+        # feedscope live ops endpoint (core/obs/server.py), opt-in via
+        # serve_obs(); started/stopped from the caller's thread only
+        self._obs_server: Optional[ObsServer] = None
 
     # --------------------------------------------------------------- submit
     def submit(self, plan, _resume=None) -> FeedHandle:
@@ -1064,6 +1172,12 @@ class FeedManager:
         if plan.trace is not None:
             # span tracing is plan-opt-in; metrics are always on
             handle.obs.enable_trace(plan.trace)
+        if plan.profile is not None:
+            # the profiler consumes spans, so profile=... implies a
+            # default tracer when the plan didn't configure one itself
+            if handle.obs.tracer is None:
+                handle.obs.enable_trace(TraceSpec())
+            handle.profiler = JourneyProfiler(plan.profile)
         if resume is not None:
             handle.durability = resume.runtime
         elif dspec is not None:
@@ -1202,8 +1316,7 @@ class FeedManager:
                     out = runner.run(frame)       # parse+enrich chained
                     handle.storage.write(out)     # ... with storage
             except BaseException as e:
-                with handle._lock:
-                    handle._worker_errs.append(e)
+                handle._note_worker_err(e)
 
         for i, h in enumerate(handle.holders):
             runner = ComputingRunner(spec, self.refstore, self.predeploy)
@@ -1237,13 +1350,40 @@ class FeedManager:
                         handle.stats.frames_in += 1
                         handle.stats.records_in += _frame_rows(frame)
             except BaseException as e:
-                with handle._lock:
-                    handle._worker_errs.append(e)
+                handle._note_worker_err(e)
 
         w = threading.Thread(target=loop, name=f"{cfg.name}-insert",
                              daemon=True)
         handle.workers.append(w)
         w.start()
+
+    # ----------------------------------------------------------- feedscope
+    def active_feeds(self) -> Dict[str, FeedHandle]:
+        """Snapshot of the active feed table (name -> handle).  The live
+        ops endpoint renders from this copy, so no HTTP handler ever
+        holds the manager lock while reading feed state."""
+        with self._lock:
+            return dict(self.feeds)
+
+    def serve_obs(self, port: int = 0,
+                  host: str = "127.0.0.1") -> ObsServer:
+        """Start (idempotently) the zero-dependency live ops endpoint:
+        ``/metrics`` (Prometheus text across all active feeds),
+        ``/health`` (SLO verdicts; 503 when any feed stalls),
+        ``/profile`` (critical-path attribution JSON) and ``/trace``
+        (recent raw spans).  ``port=0`` binds a free port — read the
+        result's ``.url``.  The server is a daemon thread reading only
+        snapshots; stop it with ``stop_obs()``."""
+        if self._obs_server is None:
+            self._obs_server = ObsServer(self, host, port).start()
+        return self._obs_server
+
+    def stop_obs(self) -> None:
+        """Shut the live ops endpoint down (no-op when never started)."""
+        srv = self._obs_server
+        if srv is not None:
+            self._obs_server = None
+            srv.stop()
 
     def stop_all(self) -> None:
         with self._lock:

@@ -61,6 +61,31 @@ class TrackedFrame(list):
         self.t_intake = t_intake
 
 
+class TrackedBatch(dict):
+    """The columnar counterpart of ``TrackedFrame``: a pre-parsed batch
+    (plain column dict) carrying the same stamps.  A ``dict`` subclass,
+    so every consumer that branches on ``isinstance(frame, dict)`` —
+    the parser's pre-parsed path, coalescing, row counting — treats it
+    as the batch it is, while ``getattr(frame, "span_ids", ...)`` lifts
+    the stamps exactly like it does off a TrackedFrame.
+
+    Two producers build these: the intake job (dict frames from
+    pre-parsed adapters) and ``FeedHandle._push_downstream`` (enriched
+    batches crossing a stage-group boundary), which is what makes
+    multi-group plans keep WAL seqs, span ids, and the intake timestamp
+    end to end instead of dropping them at the intermediate holder
+    hand-off."""
+
+    __slots__ = ("wal_seqs", "span_ids", "t_intake")
+
+    def __init__(self, batch, wal_seqs: Optional[Tuple[int, ...]] = None,
+                 span_ids: Tuple[int, ...] = (), t_intake: float = 0.0):
+        super().__init__(batch)
+        self.wal_seqs = tuple(wal_seqs) if wal_seqs else None
+        self.span_ids = tuple(span_ids)
+        self.t_intake = t_intake
+
+
 class Adapter:
     """Iterator of frames (list[bytes]); ``stop()`` requests early end.
 
@@ -308,11 +333,19 @@ class IntakeJob(threading.Thread):
                     wal_s = time.perf_counter() - t_wal
                     self._ledger.note_logged(seq, off)
                     frame = TrackedFrame(frame, (seq,))
-                if self._obs is not None and not isinstance(frame, dict):
+                if self._obs is not None:
                     # currency stamp (always) + span ids (tracing only);
-                    # no lock is held here (feedlint R6 discipline)
-                    if not isinstance(frame, TrackedFrame):
-                        frame = TrackedFrame(frame)
+                    # no lock is held here (feedlint R6 discipline).
+                    # Pre-parsed dict frames ride a TrackedBatch, raw
+                    # line frames a TrackedFrame — same stamps either way
+                    if isinstance(frame, dict):
+                        if not isinstance(frame, TrackedBatch):
+                            frame = TrackedBatch(frame)
+                        nrows = batch_rows(frame)
+                    else:
+                        if not isinstance(frame, TrackedFrame):
+                            frame = TrackedFrame(frame)
+                        nrows = len(frame)
                     frame.t_intake = time.monotonic()
                     if wal_s is not None:
                         self._wal_hist.observe(wal_s)
@@ -320,11 +353,11 @@ class IntakeJob(threading.Thread):
                         frame.span_ids = (self._obs.new_span(),)
                         self._obs.emit("intake.draw", frame.span_ids,
                                        t0=frame.t_intake, dur=draw_s,
-                                       rows=len(frame))
+                                       rows=nrows)
                         if wal_s is not None:
                             self._obs.emit("wal.append", frame.span_ids,
                                            t0=frame.t_intake, dur=wal_s,
-                                           rows=len(frame))
+                                           rows=nrows)
                 while True:
                     # snapshot the live holder list each frame (elasticity)
                     hs = list(self.holders)

@@ -16,10 +16,15 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.obs.health import (FeedHealthModel, HealthReport,
+                                   HealthSpec, STATE_CODE)
 from repro.core.obs.metrics import (Counter, Gauge, Histogram,
                                     HistogramSnapshot, MetricsRegistry,
                                     MetricValue, ROWS_BOUNDS,
                                     SECONDS_BOUNDS, mangle, percentile_of)
+from repro.core.obs.profile import (HOP_ORDER, HopStats, JourneyProfiler,
+                                    ProfileReport, ProfileSpec)
+from repro.core.obs.server import ObsServer, http_get
 from repro.core.obs.trace import Tracer, TraceSpec, write_jsonl
 
 
@@ -63,4 +68,7 @@ class FeedObs:
 __all__ = ["FeedObs", "MetricsRegistry", "MetricValue", "Counter", "Gauge",
            "Histogram", "HistogramSnapshot", "Tracer", "TraceSpec",
            "SECONDS_BOUNDS", "ROWS_BOUNDS", "mangle", "percentile_of",
-           "write_jsonl"]
+           "write_jsonl",
+           "FeedHealthModel", "HealthReport", "HealthSpec", "STATE_CODE",
+           "HOP_ORDER", "HopStats", "JourneyProfiler", "ProfileReport",
+           "ProfileSpec", "ObsServer", "http_get"]

@@ -29,6 +29,7 @@ Concurrency contract (docs/CONCURRENCY.md, enforced by feedlint R6):
 
 from __future__ import annotations
 
+import math
 import re
 import threading
 from typing import Dict, Iterable, List, Mapping, Tuple, Union
@@ -149,7 +150,10 @@ class Histogram:
 
     def percentile(self, q: float) -> float:
         """Exact percentile over the retained raw samples (lock-free
-        copy of the bounded ring; 0 when never observed)."""
+        copy of the bounded ring; ``nan`` when never observed — a
+        percentile of an empty distribution is undefined, and 0.0 used
+        to read as "instant", which is a lie health rules would act
+        on)."""
         return percentile_of(tuple(self._samples), q)
 
 
@@ -171,11 +175,12 @@ class HistogramSnapshot:
         self.samples = samples
 
     def percentile(self, q: float) -> float:
-        """Exact percentile over the retained raw samples (0 when the
-        histogram has never been observed)."""
+        """Exact percentile over the retained raw samples (``nan`` when
+        the histogram has never been observed — undefined, not zero;
+        callers wanting a default test ``count`` or ``math.isnan``)."""
         xs = sorted(self.samples)
         if not xs:
-            return 0.0
+            return math.nan
         return float(xs[min(len(xs) - 1, int(q * len(xs)))])
 
     @property
@@ -343,10 +348,12 @@ class MetricsRegistry:
 
 
 def percentile_of(values: Iterable[float], q: float) -> float:
-    """Shared sorted-rank percentile (the RepairStats convention)."""
+    """Shared sorted-rank percentile (the RepairStats convention).
+    Returns ``nan`` for an empty input: a percentile of no samples is
+    undefined, and the old 0.0 masked "never observed" as "instant"."""
     xs = sorted(values)
     if not xs:
-        return 0.0
+        return math.nan
     return float(xs[min(len(xs) - 1, int(q * len(xs)))])
 
 

@@ -51,7 +51,7 @@ from repro.core.durability import DurableSpec
 from repro.core.elasticity import ElasticSpec
 from repro.core.enrich.queries import EnrichUDF, chain, make_filter
 from repro.core.intake import Adapter
-from repro.core.obs import TraceSpec
+from repro.core.obs import HealthSpec, ProfileSpec, TraceSpec
 from repro.core.refdata import RefStore
 from repro.core.repair import RepairSpec
 
@@ -120,7 +120,8 @@ class StageGroup:
 # FeedConfig knobs a plan carries through to the feed runtime
 _OPTION_KEYS = ("num_partitions", "holder_capacity", "work_stealing",
                 "max_retries", "retry_backoff_s", "coalesce_rows",
-                "coalesce_bytes", "fault_hook", "elastic", "trace")
+                "coalesce_bytes", "fault_hook", "elastic", "trace",
+                "profile", "health")
 
 
 def _coerce_elastic(value) -> Optional[ElasticSpec]:
@@ -148,6 +149,38 @@ def _coerce_trace(value) -> Optional[TraceSpec]:
         except (TypeError, ValueError) as e:
             raise PlanError(f"invalid trace spec {value!r}: {e}") from e
     raise PlanError("trace must be a TraceSpec, dict, or bool, got "
+                    f"{type(value).__name__}")
+
+
+def _coerce_profile(value) -> Optional[ProfileSpec]:
+    if value is None or isinstance(value, ProfileSpec):
+        return value
+    if value is True:
+        return ProfileSpec()
+    if value is False:
+        return None
+    if isinstance(value, dict):
+        try:
+            return ProfileSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid profile spec {value!r}: {e}") from e
+    raise PlanError("profile must be a ProfileSpec, dict, or bool, got "
+                    f"{type(value).__name__}")
+
+
+def _coerce_health(value) -> Optional[HealthSpec]:
+    if value is None or isinstance(value, HealthSpec):
+        return value
+    if value is True:
+        return HealthSpec()
+    if value is False:
+        return None
+    if isinstance(value, dict):
+        try:
+            return HealthSpec(**value)
+        except (TypeError, ValueError) as e:
+            raise PlanError(f"invalid health spec {value!r}: {e}") from e
+    raise PlanError("health must be a HealthSpec, dict, or bool, got "
                     f"{type(value).__name__}")
 
 
@@ -218,6 +251,12 @@ class IngestPlan:
     # batch-span tracing policy (core/obs): metrics are always on, but
     # per-hop span emission is opt-in via ``.options(trace=...)``
     trace: Optional[TraceSpec] = None
+    # feedscope (core/obs): journey profiler policy — implies a default
+    # tracer when ``trace`` is unset — and SLO thresholds for the feed
+    # health model (``FeedHandle.profile()`` / ``health()``, /profile
+    # and /health on the live ops endpoint)
+    profile: Optional[ProfileSpec] = None
+    health: Optional[HealthSpec] = None
 
     @property
     def store_spec(self) -> Optional[StoreSpec]:
@@ -269,7 +308,12 @@ class Pipeline:
         coalesce_bytes, fault_hook, elastic (an ``ElasticSpec`` or kwargs
         dict — the feed-wide default elastic bounds; per-stage bounds go on
         ``enrich(..., elastic=...)``), trace (a ``TraceSpec``, kwargs dict,
-        or True — enables per-hop batch span tracing, see core/obs)."""
+        or True — enables per-hop batch span tracing, see core/obs),
+        profile (a ``ProfileSpec``, kwargs dict, or True — journey
+        reconstruction + critical-path bottleneck attribution via
+        ``handle.profile()``; implies a default tracer), health (a
+        ``HealthSpec``, kwargs dict, or True — SLO thresholds for
+        ``handle.health()``; defaults apply even without the option)."""
         for k in kw:
             if k not in _OPTION_KEYS:
                 raise PlanError(f"unknown option {k!r} "
@@ -278,6 +322,10 @@ class Pipeline:
             kw = dict(kw, elastic=_coerce_elastic(kw["elastic"]))
         if "trace" in kw:
             kw = dict(kw, trace=_coerce_trace(kw["trace"]))
+        if "profile" in kw:
+            kw = dict(kw, profile=_coerce_profile(kw["profile"]))
+        if "health" in kw:
+            kw = dict(kw, health=_coerce_health(kw["health"]))
         self._opts.update(kw)
         return self
 

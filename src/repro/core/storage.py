@@ -282,7 +282,12 @@ class StoragePartition:
         self._obs = obs
         self._flush_hist = (obs.registry.histogram("store_flush_s")
                             if obs is not None else None)
-        self._flush_events: List[Tuple[int, float]] = []  # guarded-by: _lock
+        # (rows, dur, span ids) per queued flush; span ids are the trace
+        # stamps of the batches buffered since the previous flush, so a
+        # traced journey closes at store.flush (core/obs/profile.py)
+        self._flush_events: List[Tuple[int, float, Tuple[int, ...]]] = \
+            []                                          # guarded-by: _lock
+        self._pending_sids: List[int] = []              # guarded-by: _lock
         self.spill_dir = spill_dir
         self.segment_rows = segment_rows
         # None = zone-map every eligible column; () disables
@@ -338,15 +343,24 @@ class StoragePartition:
 
     # ---------------------------------------------------------------- writes
     def insert(self, batch: Dict[str, np.ndarray], upsert: bool,
-               lineage: Optional[Lineage] = None) -> int:
+               lineage: Optional[Lineage] = None,
+               span_ids: Tuple[int, ...] = ()) -> int:
         """Insert valid rows; returns #rows newly stored (duplicates skipped
         in insert mode, remapped in upsert mode).  ``lineage`` is the ref
-        versions the batch was enriched under, recorded per chunk."""
+        versions the batch was enriched under, recorded per chunk;
+        ``span_ids`` are the batch's trace stamps — buffered until the
+        next flush so its ``store.flush`` span names the journeys it
+        closed."""
         valid = batch["valid"]
         ids = np.asarray(batch["id"][valid], np.int64)
         if ids.size == 0:
             return 0
         with self._lock:
+            if span_ids and self._obs is not None:
+                self._pending_sids.extend(span_ids)
+                if len(self._pending_sids) > 4096:
+                    # bounded like the sample rings: drop oldest stamps
+                    del self._pending_sids[:len(self._pending_sids) // 2]
             fresh_mask = ~self._index.contains(ids)
             take = np.ones(len(ids), bool) if upsert else fresh_mask
             if not take.any():
@@ -423,7 +437,9 @@ class StoragePartition:
         self._chunk_lineage = []
         self._rows_buffered = 0
         if self._obs is not None:
-            self._flush_events.append((n, time.perf_counter() - t_flush))
+            self._flush_events.append((n, time.perf_counter() - t_flush,
+                                       tuple(self._pending_sids)))
+            self._pending_sids.clear()
 
     def _write_manifest_locked(self) -> None:  # requires-lock: _lock
         # feedlint: allow[blocking-under-lock] manifest rewrite must be
@@ -485,9 +501,9 @@ class StoragePartition:
             if not self._flush_events:
                 return
             events, self._flush_events = self._flush_events, []
-        for n, dur in events:
+        for n, dur, sids in events:
             self._flush_hist.observe(dur)
-            self._obs.emit("store.flush", (), t0=time.monotonic() - dur,
+            self._obs.emit("store.flush", sids, t0=time.monotonic() - dur,
                            dur=dur, rows=n, partition=self.pid)
 
     def _load_manifest_locked(self) -> Optional[Dict]:
@@ -1152,12 +1168,15 @@ class StorageJob:
         self._lock = threading.Lock()    # lock-name: store-stats
 
     def write(self, batch: Dict[str, np.ndarray],
-              lineage: Optional[Lineage] = None) -> int:
+              lineage: Optional[Lineage] = None,
+              span_ids: Tuple[int, ...] = ()) -> int:
         """Hash-partition one enriched batch by primary key and insert.
         The batch may be shared with other sinks of the same plan (tee
         fan-out): treated as read-only — rows are masked into fresh arrays,
         never mutated in place.  ``lineage`` is the ref-version tuple the
-        batch was enriched under (recorded per stored chunk)."""
+        batch was enriched under (recorded per stored chunk); ``span_ids``
+        are the batch's trace stamps, threaded to each touched partition
+        so its next ``store.flush`` span carries them."""
         t0 = time.perf_counter()
         npart = len(self.partitions)
         part = (batch["id"] % npart).astype(np.int64)
@@ -1168,7 +1187,8 @@ class StorageJob:
                 continue
             sub = {k: v[m] for k, v in batch.items()}
             sub["valid"] = np.ones(int(m.sum()), bool)
-            stored += self.partitions[p].insert(sub, self.upsert, lineage)
+            stored += self.partitions[p].insert(sub, self.upsert, lineage,
+                                                span_ids=span_ids)
         with self._lock:
             self.stored += stored
             self.batches += 1

@@ -35,7 +35,8 @@ GOOD = {
     "fig_query": {"prune_speedup": 3.2, "live_query_p95_ms": 40.0,
                   "batched_agg_speedup": 2.0, "merged_scan_speedup": 3.0},
     "fig25": {"bursty_elastic_vs_best_static": 1.1,
-              "obs_overhead_ratio": 1.0},
+              "obs_overhead_ratio": 1.0,
+              "profile_overhead_ratio": 1.0},
 }
 
 

@@ -390,6 +390,52 @@ def test_r6_allow_comment_suppresses_with_reason(tmp_path):
     assert lint_src(tmp_path, src) == []
 
 
+# the feedscope ops-server discipline (core/obs/server.py): HTTP handlers
+# must render from snapshot()/drained copies, never observe/emit inside a
+# strict lock window.  Fixture pair pins the rule on a server-ish shape.
+R6_SERVER_VIOLATION = '''
+import threading
+
+class OpsRenderer:
+    def __init__(self, obs):
+        self._lock = threading.Lock()   # lock-name: renderer
+        self._obs = obs
+        self._hits = 0                  # guarded-by: _lock
+
+    def render(self, t0, dt):
+        with self._lock:
+            self._hits += 1
+            self._obs.emit("scrape", (), t0, dt)   # BAD: span under lock
+            return self._obs.registry.exposition()
+'''
+
+R6_SERVER_CLEAN = '''
+import threading
+
+class OpsRenderer:
+    def __init__(self, obs):
+        self._lock = threading.Lock()   # lock-name: renderer
+        self._obs = obs
+        self._hits = 0                  # guarded-by: _lock
+
+    def render(self, t0, dt):
+        with self._lock:
+            self._hits += 1
+            snap = self._obs.registry.snapshot()
+        self._obs.emit("scrape", (), t0, dt)       # outside: legal
+        return snap
+'''
+
+
+def test_r6_server_render_emitting_under_lock_fires(tmp_path):
+    findings = lint_src(tmp_path, R6_SERVER_VIOLATION)
+    assert rules_of(findings) == ["obs-under-lock"]
+
+
+def test_r6_server_snapshot_under_lock_emit_outside_is_clean(tmp_path):
+    assert lint_src(tmp_path, R6_SERVER_CLEAN) == []
+
+
 # ---------------------------------------------------------------------------
 # CLI contract (what the CI job runs) + integration
 # ---------------------------------------------------------------------------

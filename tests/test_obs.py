@@ -8,6 +8,7 @@ the property-test extras are not installed.
 """
 
 import json
+import math
 
 import pytest
 
@@ -99,7 +100,8 @@ def test_merge_counters_add_gauges_overwrite_histograms_combine():
 def test_mangle_and_percentile_helpers():
     assert mangle("dispatch_path_('seg', 'kern')") == \
         "dispatch_path___seg____kern__"
-    assert percentile_of([], 0.5) == 0.0
+    # empty input is "never observed", not "instant": nan by design
+    assert math.isnan(percentile_of([], 0.5))
     assert percentile_of([3.0, 1.0, 2.0], 0.5) == 2.0
 
 
